@@ -1,0 +1,138 @@
+"""Shared harness for the paper-reproduction benchmarks (UMT vs baseline).
+
+``MiniMPI`` is a two-rank message layer over socketpairs whose blocking
+send/recv go through the monitored-I/O shim — the stand-in for the paper's
+Ethernet MPI (network ops *block in the kernel*, which is exactly the UMT
+trigger; Omni-Path/IB user-space paths would not, as the paper notes).
+"""
+from __future__ import annotations
+
+import json
+import os
+import socket
+import struct
+import time
+from dataclasses import asdict, dataclass
+
+from repro.core import UMTRuntime, io
+
+
+@dataclass
+class BenchResult:
+    name: str
+    umt: bool
+    fom: float                  # figure of merit (cells/s or kc/s)
+    makespan_s: float
+    cpu_util: float
+    oversub_frac: float
+    ctx_switches: int
+    wakes: int
+    surrenders: int
+    n_workers: int
+    write_mib_s: float = 0.0
+    net_mib_s: float = 0.0
+
+    def row(self) -> str:
+        return (f"{self.name},{'UMT' if self.umt else 'baseline'},"
+                f"fom={self.fom:.0f},t={self.makespan_s:.2f}s,"
+                f"cpu={self.cpu_util * 100:.1f}%,"
+                f"oversub={self.oversub_frac * 100:.2f}%,"
+                f"ctx={self.ctx_switches},disk={self.write_mib_s:.1f}MiB/s,"
+                f"net={self.net_mib_s:.2f}MiB/s")
+
+
+def result_from_run(name, rt: UMTRuntime, dt: float, cells: float,
+                    bytes_written=0, bytes_net=0) -> BenchResult:
+    s = rt.stats()
+    return BenchResult(
+        name=name, umt=rt.umt, fom=cells / dt, makespan_s=dt,
+        cpu_util=s["cpu_util"], oversub_frac=s["oversub_frac"],
+        ctx_switches=s["ctx_switches"], wakes=s["wakes"],
+        surrenders=s["surrenders"], n_workers=s["n_workers"],
+        write_mib_s=bytes_written / dt / 2**20,
+        net_mib_s=bytes_net / dt / 2**20)
+
+
+def speedup_report(base: BenchResult, umt: BenchResult) -> str:
+    sp = umt.fom / base.fom - 1.0
+    return (f"{base.name}: speedup={sp * 100:+.1f}%  "
+            f"cpu {base.cpu_util * 100:.1f}%->{umt.cpu_util * 100:.1f}%  "
+            f"oversub(UMT)={umt.oversub_frac * 100:.2f}%")
+
+
+def dump_jsonl(path: str, results: list[BenchResult], extra=None):
+    with open(path, "a") as f:
+        for r in results:
+            d = asdict(r)
+            d.update(extra or {})
+            f.write(json.dumps(d) + "\n")
+
+
+class MiniMPI:
+    """Two endpoints connected by a socketpair; blocking, monitored."""
+
+    HDR = struct.Struct("<iQ")
+
+    def __init__(self):
+        a, b = socket.socketpair()
+        for s in (a, b):
+            # small buffers: sends larger than this genuinely block until
+            # the peer drains (Ethernet-like backpressure)
+            s.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, 1 << 14)
+        self.ends = (a, b)
+        self.sent_bytes = 0
+
+    def send(self, me: int, tag: int, payload: bytes):
+        sock = self.ends[me]
+        io.sendall(sock, self.HDR.pack(tag, len(payload)))
+        io.sendall(sock, payload)
+        self.sent_bytes += len(payload) + self.HDR.size
+
+    def recv(self, me: int, tag: int) -> bytes:
+        sock = self.ends[me]
+        hdr = io.recv_exact(sock, self.HDR.size)
+        got_tag, n = self.HDR.unpack(hdr)
+        assert got_tag == tag, (got_tag, tag)
+        return io.recv_exact(sock, n)
+
+    def close(self):
+        for s in self.ends:
+            s.close()
+
+
+def timed(fn, *args, **kw):
+    t0 = time.monotonic()
+    out = fn(*args, **kw)
+    return time.monotonic() - t0, out
+
+
+def settle():
+    """Flush dirty pages + drop caches so runs don't bleed into each other
+    (the paper runs 5-10 repetitions per config for the same reason)."""
+    os.sync()
+    try:
+        with open("/proc/sys/vm/drop_caches", "w") as f:
+            f.write("3\n")
+    except OSError:
+        pass
+    time.sleep(0.2)
+
+
+def run_repeated(fn, reps: int = 5, **kw) -> "BenchResult":
+    """Median-FOM result over `reps` runs with settling in between."""
+    results = []
+    for _ in range(reps):
+        settle()
+        results.append(fn(**kw))
+    results.sort(key=lambda r: r.fom)
+    return results[len(results) // 2]
+
+
+def fresh_dir(path: str) -> str:
+    os.makedirs(path, exist_ok=True)
+    for f in os.listdir(path):
+        try:
+            os.unlink(os.path.join(path, f))
+        except OSError:
+            pass
+    return path

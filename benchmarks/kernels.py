@@ -1,0 +1,71 @@
+"""Kernel micro-bench: validates each Pallas kernel against its oracle at
+benchmark shapes and times the jnp reference path (the only meaningful
+wall-clock on this CPU container — Mosaic timings need a real TPU).
+Emits (name, us_per_call, derived) rows for benchmarks.run.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.monotonic()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.monotonic() - t0) / iters * 1e6
+
+
+def main(fast: bool = False):
+    from repro.kernels import (flash_attention, flash_attention_ref,
+                               rms_norm, rms_norm_ref, ssd_scan,
+                               ssd_scan_ref)
+    rows = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+
+    s = 512 if fast else 1024
+    q = jax.random.normal(ks[0], (1, s, 8, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, s, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, s, 2, 64), jnp.float32)
+    ref = jax.jit(lambda a, b, c: flash_attention_ref(a, b, c, causal=True))
+    us = _time(ref, q, k, v)
+    out = flash_attention(q, k, v, causal=True, block_q=128, block_k=128,
+                          interpret=True)
+    err = float(jnp.max(jnp.abs(out - ref(q, k, v))))
+    rows.append((f"flash_attention_s{s}", us,
+                 f"interpret_allclose_maxerr={err:.1e}"))
+
+    b, sq, h, p, n = 1, 512 if fast else 1024, 4, 64, 64
+    x = jax.random.normal(ks[0], (b, sq, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, sq, h))) * 0.1
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bm = jax.random.normal(ks[3], (b, sq, h, n), jnp.float32) * 0.5
+    cm = jax.random.normal(ks[0], (b, sq, h, n), jnp.float32) * 0.5
+    refs = jax.jit(lambda *t: ssd_scan_ref(*t, chunk=128))
+    us = _time(refs, x, dt, a, bm, cm)
+    y, _ = ssd_scan(x, dt, a, bm, cm, chunk=128, interpret=True)
+    err = float(jnp.max(jnp.abs(y - refs(x, dt, a, bm, cm)[0])))
+    rows.append((f"ssd_scan_s{sq}", us,
+                 f"interpret_allclose_maxerr={err:.1e}"))
+
+    xr = jax.random.normal(ks[0], (4096, 1024), jnp.float32)
+    w = jnp.ones((1024,), jnp.float32)
+    refn = jax.jit(rms_norm_ref)
+    us = _time(refn, xr, w)
+    err = float(jnp.max(jnp.abs(rms_norm(xr, w, interpret=True)
+                                - refn(xr, w))))
+    rows.append(("rms_norm_4096x1024", us,
+                 f"interpret_allclose_maxerr={err:.1e}"))
+    for r in rows:
+        print(f"kernel {r[0]}: ref={r[1]:.0f}us  {r[2]}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Render dryrun_results.jsonl into the EXPERIMENTS.md roofline tables."""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load(path="dryrun_results.jsonl"):
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            key = (r.get("arch"), r.get("shape"), r.get("mesh", ""))
+            recs[key] = r
+    return recs
+
+
+def fmt(path="dryrun_results.jsonl", mesh="16x16"):
+    recs = load(path)
+    rows = []
+    print(f"\n### Mesh {mesh}\n")
+    print("| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | bound | "
+          "frac | useful | GB/dev peak |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for (a, s, m), r in sorted(recs.items()):
+        if m != mesh:
+            continue
+        if "error" in r:
+            print(f"| {a} | {s} | ERROR {r['error'][:40]} | | | | | | |")
+            continue
+        if "roofline" not in r:
+            continue
+        rl = r["roofline"]
+        tc, tm, tl = (rl["t_compute_s"], rl["t_memory_s"],
+                      rl["t_collective_s"])
+        frac = tc / max(tm, tl, tc, 1e-12)
+        peak = r["bytes_per_device"]["peak"] / 2**30
+        uf = r.get("useful_flops_ratio") or 0
+        print(f"| {a} | {s} | {tc:.4g} | {tm:.4g} | {tl:.4g} | "
+              f"{rl['bottleneck'][:4]} | {frac:.2f} | {uf:.2f} | "
+              f"{peak:.1f} |")
+        rows.append((a, s, frac))
+    return rows
+
+
+if __name__ == "__main__":
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.jsonl"
+    fmt(path, "16x16")
+    fmt(path, "2x16x16")

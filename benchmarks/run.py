@@ -1,0 +1,108 @@
+"""Benchmark suite entry point: one function per paper table + the
+roofline table assembled from the dry-run JSONL.
+
+  python -m benchmarks.run [--fast] [--skip-roofline]
+
+Prints ``name,us_per_call,derived`` CSV rows at the end for harness
+consumption.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+CSV_ROWS: list[tuple[str, float, str]] = []
+
+
+def bench_heat_table_iii_iv(fast: bool):
+    from . import heat
+    reps = 3 if fast else 5
+    rows = heat.main(["--n", "1024", "--blocks", "16", "--iters", "30",
+                      "--iof", "1", "--cores", "1", "--reps", str(reps)])
+    base, umt = rows[0], rows[1]
+    CSV_ROWS.append(("heat_sync_baseline", 1e12 / base.fom,
+                     f"fom={base.fom:.0f}"))
+    CSV_ROWS.append(("heat_sync_umt", 1e12 / umt.fom,
+                     f"speedup={umt.fom / base.fom - 1:+.1%};"
+                     f"oversub={umt.oversub_frac:.2%}"))
+
+
+def bench_fwi_table_i(fast: bool):
+    from . import fwi
+    reps = 2 if fast else 3
+    rows = fwi.main(["--reps", str(reps)])
+    base, umt = rows[0], rows[1]
+    CSV_ROWS.append(("fwi_baseline", 1e12 / base.fom,
+                     f"fom={base.fom:.0f}"))
+    CSV_ROWS.append(("fwi_umt", 1e12 / umt.fom,
+                     f"speedup={umt.fom / base.fom - 1:+.1%}"))
+
+
+def bench_overhead_table_ii(fast: bool):
+    from . import overhead
+    out = overhead.main(["--reps", "2" if fast else "3"])
+    CSV_ROWS.append(("eventfd_write", out["write_us"], "per-op"))
+    CSV_ROWS.append(("eventfd_read", out["read_us"], "per-op"))
+    for r in out["rows"]:
+        CSV_ROWS.append((f"umt_overhead_task{r['task_ms']:.1f}ms",
+                         r["task_ms"] * 1e3,
+                         f"overhead={r['overhead_pct']:+.2f}%"))
+
+
+def bench_kernels(fast: bool):
+    try:
+        from . import kernels as kb
+    except ImportError:
+        return
+    for row in kb.main(fast=fast):
+        CSV_ROWS.append(row)
+
+
+def roofline_table(path="dryrun_results.jsonl"):
+    if not os.path.exists(path):
+        print(f"(no {path}; run `python -m repro.launch.dryrun` first)")
+        return
+    best = {}
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if "roofline" not in r:
+                continue
+            best[(r["arch"], r["shape"], r["mesh"])] = r
+    print("\n== Roofline (from dry-run artifacts) ==")
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':8s} {'t_comp':>9s} "
+           f"{'t_mem':>9s} {'t_coll':>9s} {'bound':>6s} {'useful':>7s}")
+    print(hdr)
+    for (a, s, m), r in sorted(best.items()):
+        rl = r["roofline"]
+        uf = r.get("useful_flops_ratio")
+        print(f"{a:22s} {s:12s} {m:8s} {rl['t_compute_s']:9.4f} "
+              f"{rl['t_memory_s']:9.4f} {rl['t_collective_s']:9.4f} "
+              f"{rl['bottleneck'][:6]:>6s} "
+              f"{uf if uf is None else round(uf, 3)!s:>7s}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    bench_heat_table_iii_iv(args.fast)
+    bench_fwi_table_i(args.fast)
+    bench_overhead_table_ii(args.fast)
+    bench_kernels(args.fast)
+    if not args.skip_roofline:
+        roofline_table()
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in CSV_ROWS:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""The paper's claim, applied to training: checkpoint I/O overlapped with
+compute via UMT vs a synchronous baseline.
+
+Trains the same tiny model twice with aggressive checkpointing (every
+step, fsync'd):
+  * baseline: synchronous saves — the step loop stalls on disk;
+  * UMT: saves are UMT tasks; blocked fsyncs release the host core and the
+    next step's prefetch/compute proceeds.
+
+    PYTHONPATH=src python examples/io_overlap_demo.py
+"""
+import shutil
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get
+from repro.core import UMTRuntime
+from repro.data import SyntheticTokenSource, UMTPrefetcher
+from repro.steps import init_train_state, make_train_step, OptHParams
+
+STEPS = 15
+# sized so a full-state checkpoint (~160 MB, fsync'd) costs about as much
+# as one optimizer step — the regime checkpoint-every-step serving jobs
+# and preemption-heavy clusters live in
+cfg = get("qwen2.5-14b").tiny(d_model=384, d_ff=1536, vocab=16384,
+                              head_dim=48)
+
+
+def run(umt: bool, sync_saves: bool) -> float:
+    ckpt = f"/tmp/io_overlap_{'umt' if umt else 'base'}"
+    shutil.rmtree(ckpt, ignore_errors=True)
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(cfg, None, OptHParams(warmup=5)))
+    src = SyntheticTokenSource(seed=3, batch=8, seq=64, vocab=cfg.vocab)
+    with UMTRuntime(n_cores=2, umt=umt) as rt:
+        mgr = CheckpointManager(ckpt, rt=None if sync_saves else rt)
+        pf = UMTPrefetcher(src, rt, depth=2)
+        # warmup/compile outside the timed region
+        b0 = {k: jnp.asarray(v) for k, v in pf.get(0).items()}
+        state, _ = step_fn(state, b0)
+        t0 = time.monotonic()
+        for step in range(1, STEPS):
+            batch = {k: jnp.asarray(v) for k, v in pf.get(step).items()}
+            state, _ = step_fn(state, batch)
+            mgr.save(state, step, wait=sync_saves)   # ckpt EVERY step
+        mgr.wait()
+        return time.monotonic() - t0
+
+
+base = run(umt=False, sync_saves=True)
+umt = run(umt=True, sync_saves=False)
+print(f"baseline (sync ckpt):   {base:.2f}s for {STEPS - 1} steps")
+print(f"UMT (overlapped ckpt):  {umt:.2f}s for {STEPS - 1} steps")
+print(f"speedup: {base / umt - 1:+.1%}")

@@ -1,0 +1,18 @@
+"""Serve a small model with batched requests: prefill a batch of prompts
+of different (padded) lengths, then decode greedily — one fused decode
+step per token across the whole batch, exactly what the decode_32k /
+long_500k dry-run cells lower at production scale.
+
+    PYTHONPATH=src python examples/serve_batch.py [--arch jamba-v0.1-52b]
+"""
+import argparse
+
+from repro.launch.serve import serve
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="jamba-v0.1-52b",
+                help="any assigned architecture (tiny variant is used)")
+args = ap.parse_args()
+
+serve(["--arch", args.arch, "--tiny", "--batch", "4",
+       "--prompt-len", "24", "--gen", "12"])

@@ -1,0 +1,70 @@
+"""Per-core event channels — the paper's UMT kernel interface, verbatim.
+
+Each core gets one **real** ``eventfd`` (paper §III-B).  The 64-bit counter
+packs two 32-bit counts: low 32 bits = threads that *blocked* on this core,
+high 32 bits = threads that *unblocked*, both since the last ``read()``.
+``read()`` drains both counts atomically (eventfd semantics reset the
+counter), exactly the downcall the paper advocates over SA-style upcalls.
+
+Counter overflow (2^32 blocks without a read) is not handled — the paper
+makes the same simplification (§III-B, footnote 4).
+"""
+from __future__ import annotations
+
+import os
+
+BLOCK_UNIT = 1
+UNBLOCK_UNIT = 1 << 32
+_MASK32 = (1 << 32) - 1
+
+
+class EventChannel:
+    """One core's eventfd, packed (blocked | unblocked<<32).
+
+    ``writes`` counts kernel-side eventfd writes (stats only — used to
+    compare the paper's design against the §V "idle-only" variant)."""
+
+    __slots__ = ("core", "fd", "_closed", "writes")
+
+    def __init__(self, core: int):
+        self.core = core
+        self.fd = os.eventfd(0, os.EFD_NONBLOCK | os.EFD_CLOEXEC)
+        self._closed = False
+        self.writes = 0
+
+    # ---- kernel side (called from the scheduler shim) ----
+    def write_block(self):
+        self.writes += 1
+        os.eventfd_write(self.fd, BLOCK_UNIT)
+
+    def write_unblock(self):
+        self.writes += 1
+        os.eventfd_write(self.fd, UNBLOCK_UNIT)
+
+    # ---- user side (Leader Thread / worker scheduling points) ----
+    def read(self) -> tuple[int, int]:
+        """Drain -> (blocked, unblocked) since last read; (0,0) if empty."""
+        try:
+            v = os.eventfd_read(self.fd)
+        except BlockingIOError:
+            return (0, 0)
+        return (v & _MASK32, v >> 32)
+
+    def fileno(self) -> int:
+        return self.fd
+
+    def close(self):
+        if not self._closed:
+            self._closed = True
+            os.close(self.fd)
+
+    def __del__(self):  # pragma: no cover
+        try:
+            self.close()
+        except Exception:
+            pass
+
+
+def umt_enable(n_cores: int) -> list[EventChannel]:
+    """The paper's ``umt_enable()`` syscall: one eventfd per core."""
+    return [EventChannel(c) for c in range(n_cores)]

@@ -1,0 +1,462 @@
+"""The UMT runtime: Nanos6-style workers + Leader Thread + idle pool,
+driven by the per-core eventfd channels (paper §III).
+
+Flow (paper Fig. 1):
+  * one worker is spawned bound to each core; spawning reports an
+    *unblock* on its core, so ``ready[core]`` converges to the number of
+    runnable workers bound there;
+  * any monitored blocking op writes a block event; the Leader Thread
+    (epolling all eventfds with the paper's 1 ms periodic rescan) sees
+    ``ready[core] == 0`` with tasks pending and wakes an idle-pool worker
+    onto that core;
+  * when the blocked worker returns, the core is oversubscribed; at the
+    next task scheduling point (start/finish/create/taskwait/taskyield) a
+    worker re-reads its core's counters and self-surrenders to the pool;
+  * parking in the pool is itself a monitored block, so the surrender
+    event propagates through the same channel (paper Fig. 1, T5).
+
+``umt=False`` gives the baseline Nanos6 model: same task graph, one worker
+per core, no event channel — a blocked worker leaves its core idle.
+"""
+from __future__ import annotations
+
+import os
+import select
+import threading
+
+from .eventchannel import umt_enable
+from .monitor import current_worker, io, umt_thread_ctrl
+from .task import DependencyTracker, ReadyQueue, Task
+from .tracing import Tracer
+
+
+class Worker(threading.Thread):
+    _next_id = 0
+
+    def __init__(self, rt: "UMTRuntime", core: int):
+        Worker._next_id += 1
+        self.wid = Worker._next_id
+        super().__init__(name=f"umt-worker-{self.wid}", daemon=True)
+        self.rt = rt
+        self.core = core
+        self.sem = threading.Semaphore(0)
+        self.monitored = rt.umt
+        self.current_task: Task | None = None
+        self.surrender_flag = False
+
+    # ---- channel plumbing used by the __schedule() shim ----
+    def block_channel(self):
+        return self.rt._ch_block(self.core)
+
+    def unblock_channel(self):
+        # read *after* a possible migration: the wake is reported on the
+        # core the Leader re-targeted us to (kernel semantics).
+        return self.rt._ch_unblock(self.core)
+
+    def on_block(self):
+        self.rt.tracer.ev("block", self.wid, self.core)
+
+    def on_unblock(self):
+        self.rt.tracer.ev("unblock", self.wid, self.core)
+
+    def migrate(self, new_core: int):
+        """Paper §III-B migration compensation: a worker moved while
+        *runnable* never wrote a block event on its old core, so the move
+        itself must write the missed (block@old, unblock@new) pair.
+
+        A *blocked/parked* worker already reported its block on the old
+        core and will report its unblock on whatever core it wakes on —
+        re-target it with ``retarget()`` instead (no compensation)."""
+        old = self.core
+        if old == new_core:
+            return
+        if self.monitored:
+            self.rt._ch_block(old).write_block()
+            self.rt._ch_unblock(new_core).write_unblock()
+            self.rt.tracer.ev("block", self.wid, old)
+            self.rt.tracer.ev("unblock", self.wid, new_core)
+        self.core = new_core
+
+    def retarget(self, new_core: int):
+        """Re-bind a *blocked* worker (wake-time migration, no events)."""
+        self.core = new_core
+
+    # ---- main loop ----
+    def run(self):
+        umt_thread_ctrl(self)
+        rt = self.rt
+        if self.monitored:
+            self.unblock_channel().write_unblock()  # became runnable here
+        rt.tracer.ev("spawn", self.wid, self.core)
+        while rt.running:
+            task = rt.ready.pop()
+            if task is None:
+                if not rt.park(self):
+                    break
+                continue
+            # scheduling point: task start
+            if rt.sched_point(self):
+                rt.ready.push_front(task)
+                if not rt.park(self, force=True):
+                    break
+                continue
+            rt.run_task(self, task)
+            # scheduling point: task finish
+            if rt.sched_point(self) and rt.running:
+                if not rt.park(self, force=True):
+                    break
+        umt_thread_ctrl(None)
+
+
+class Leader(threading.Thread):
+    """The paper's Leader Thread: epoll over all eventfds + 1 ms rescan."""
+
+    def __init__(self, rt: "UMTRuntime"):
+        super().__init__(name="umt-leader", daemon=True)
+        self.rt = rt
+
+    def run(self):
+        rt = self.rt
+        ep = select.epoll()
+        fd2core = {}
+        for ch in rt.channels:
+            ep.register(ch.fd, select.EPOLLIN)
+            fd2core[ch.fd] = ch.core
+        ep.register(rt._wake_r, select.EPOLLIN)
+        # The 1 ms rescan is only a fallback for racy counters — eventfd
+        # writes wake epoll instantly — so back off exponentially while
+        # nothing happens (keeps overhead near zero on compute phases).
+        timeout = rt.scan_interval
+        try:
+            while rt.running:
+                events = ep.poll(timeout)
+                if events:
+                    timeout = rt.scan_interval
+                else:
+                    timeout = min(timeout * 2, 0.05)
+                for fd, _ in events:
+                    if fd == rt._wake_r:
+                        try:
+                            os.read(rt._wake_r, 8)
+                        except BlockingIOError:
+                            pass
+                        continue
+                    rt.drain_core(fd2core[fd])
+                if not rt.running:
+                    break
+                rt.leader_scan()
+        finally:
+            ep.close()
+
+
+class UMTRuntime:
+    """notify: "all" — every block/unblock is written (the paper's
+    implemented design); "idle_only" — the paper's §III-D/§V *proposed*
+    v2: the (shim's) kernel side keeps a per-core running count and only
+    writes an event on the 1->0 (core idle) and 0->1 (core busy again)
+    transitions, cutting event traffic and making counter overflow moot.
+    """
+
+    def __init__(self, n_cores: int | None = None, umt: bool = True,
+                 max_workers_per_core: int = 8, scan_interval: float = 0.001,
+                 trace: bool = True, notify: str = "all"):
+        assert notify in ("all", "idle_only")
+        self.n_cores = n_cores or os.cpu_count() or 1
+        self.umt = umt
+        self.notify = notify
+        # "kernel-side" per-core runnable counts for idle_only mode
+        self._krun = [0] * (n_cores or os.cpu_count() or 1)
+        self._krun_lock = threading.Lock()
+        self.scan_interval = scan_interval
+        self.max_workers = max_workers_per_core * self.n_cores
+        self.running = True
+        self.tracer = Tracer(trace)
+        self.ready = ReadyQueue()
+        self.deps = DependencyTracker()
+        self.channels = umt_enable(self.n_cores)
+        self.ready_count = [0] * self.n_cores     # user-space per-core count
+        self._count_lock = threading.Lock()
+        self._pool: list[Worker] = []
+        self._pool_lock = threading.Lock()
+        self._workers: list[Worker] = []
+        self._outstanding = 0
+        self._quiet = threading.Event()
+        self._quiet.set()
+        self._wake_r, self._wake_w = os.pipe2(os.O_NONBLOCK)
+        self.stats_extra = {"wakes": 0, "surrenders": 0, "spawned": 0}
+
+        for c in range(self.n_cores):
+            self._spawn(c)
+        self.leader = Leader(self)
+        if self.umt:
+            self.leader.start()
+
+    # ------------------------------------------------------------ lifecycle
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()
+
+    def shutdown(self):
+        self.wait_all()
+        self.running = False
+        with self._pool_lock:
+            pool = list(self._pool)
+            self._pool.clear()
+        for w in pool:
+            w.sem.release()
+        for w in list(self._workers):
+            w.sem.release()
+        try:
+            os.write(self._wake_w, b"\x01" * 8)
+        except BlockingIOError:
+            pass
+        for w in self._workers:
+            w.join(timeout=5)
+        if self.umt:
+            self.leader.join(timeout=5)
+        for ch in self.channels:
+            ch.close()
+        os.close(self._wake_r)
+        os.close(self._wake_w)
+
+    def _spawn(self, core: int) -> Worker:
+        w = Worker(self, core)
+        self._workers.append(w)
+        self.stats_extra["spawned"] += 1
+        w.start()
+        return w
+
+    # ------------------------------------------------------------ submission
+    def submit(self, fn, *args, in_=(), out=(), name=None, **kwargs) -> Task:
+        parent_w = current_worker()
+        parent = parent_w.current_task if isinstance(parent_w, Worker) and \
+            parent_w.rt is self else None
+        t = Task(fn, args, kwargs, in_, out, name, parent)
+        with self._count_lock:
+            self._outstanding += 1
+            self._quiet.clear()
+        if parent is not None:
+            with self.deps.lock:
+                parent.children_left += 1
+                parent.child_done_ev.clear()
+        n = self.deps.register(t)
+        if n == 0:
+            self.push_ready(t)
+        # scheduling point: task creation (counter refresh; a surrender
+        # mid-task is not possible at user level — see DESIGN fidelity
+        # ledger — the start/finish points carry the surrender action).
+        if parent is not None and self.umt:
+            self.drain_core(parent_w.core)
+        return t
+
+    def task(self, fn=None, **opts):
+        """Decorator sugar: ``@rt.task(out=("x",))``."""
+        def deco(f):
+            def submitter(*args, **kw):
+                return self.submit(f, *args, **opts, **kw)
+            submitter.__name__ = f.__name__
+            return submitter
+        return deco(fn) if fn is not None else deco
+
+    def push_ready(self, t: Task):
+        self.ready.push(t)
+        # Baseline has no leader: always self-wake.  In UMT mode the Leader
+        # is the waker; waking on *every* push causes park/wake churn when
+        # the dependency wavefront briefly starves the queue — but if some
+        # core is genuinely idle we wake immediately rather than waiting
+        # for the 1 ms scan.
+        if not self.umt:
+            self._wake_for_work()
+        else:
+            for c in range(self.n_cores):
+                self.drain_core(c)
+            with self._count_lock:
+                idle = any(rc <= 0 for rc in self.ready_count)
+            if idle:
+                self._wake_for_work()
+
+    def _wake_for_work(self):
+        with self._pool_lock:
+            w = self._pool.pop() if self._pool else None
+        if w is not None:
+            self.stats_extra["wakes"] += 1
+            w.sem.release()
+
+    # ------------------------------------------------------------ execution
+    def run_task(self, w: Worker, t: Task):
+        w.current_task = t
+        t.state = "running"
+        self.tracer.ev("task_start", w.wid, w.core, t.name)
+        try:
+            t.result = t.fn(*t.args, **t.kwargs)
+        except BaseException as e:  # noqa: BLE001 — propagate via handle
+            t.exc = e
+        self.tracer.ev("task_end", w.wid, w.core, t.name)
+        w.current_task = None
+        self.complete(t)
+
+    def complete(self, t: Task):
+        with self.deps.lock:
+            t.state = "done"
+            t.done_ev.set()
+            succs, t.succs = list(t.succs), []
+            newly_ready = []
+            for s in succs:
+                s.pending -= 1
+                if s.pending == 0:
+                    newly_ready.append(s)
+            p = t.parent
+            if p is not None:
+                p.children_left -= 1
+                if p.children_left == 0:
+                    p.child_done_ev.set()
+        for s in newly_ready:
+            self.push_ready(s)
+        with self._count_lock:
+            self._outstanding -= 1
+            if self._outstanding == 0:
+                self._quiet.set()
+
+    # ------------------------------------------------------ UMT bookkeeping
+    class _NullChannel:
+        def write_block(self):
+            pass
+
+        def write_unblock(self):
+            pass
+
+    _NULL = _NullChannel()
+
+    def _ch_block(self, core: int):
+        """Channel a block event should be written to.  idle_only mode
+        fires only on the 1 -> 0 (core went idle) transition of the
+        kernel-side running count."""
+        if self.notify != "idle_only":
+            return self.channels[core]
+        with self._krun_lock:
+            self._krun[core] -= 1
+            fire = self._krun[core] <= 0
+        return self.channels[core] if fire else self._NULL
+
+    def _ch_unblock(self, core: int):
+        """idle_only: fire only on 0 -> 1 (core busy again)."""
+        if self.notify != "idle_only":
+            return self.channels[core]
+        with self._krun_lock:
+            was_idle = self._krun[core] <= 0
+            self._krun[core] += 1
+        return self.channels[core] if was_idle else self._NULL
+
+    def drain_core(self, core: int):
+        blocked, unblocked = self.channels[core].read()
+        if blocked or unblocked:
+            with self._count_lock:
+                self.ready_count[core] += unblocked - blocked
+
+    def leader_scan(self):
+        """Wake an idle worker onto every idle core that has pending work."""
+        if len(self.ready) == 0:
+            return
+        for core in range(self.n_cores):
+            if len(self.ready) == 0:
+                break
+            with self._count_lock:
+                idle = self.ready_count[core] <= 0
+            if not idle:
+                continue
+            w = None
+            with self._pool_lock:
+                # prefer a worker already bound to this core (cache affinity)
+                for i, cand in enumerate(self._pool):
+                    if cand.core == core:
+                        w = self._pool.pop(i)
+                        break
+                if w is None and self._pool:
+                    w = self._pool.pop()
+            if w is None:
+                if len(self._workers) < self.max_workers:
+                    self._spawn(core)
+                continue
+            w.retarget(core)     # blocked: unblock lands on the new core
+            self.stats_extra["wakes"] += 1
+            w.sem.release()
+
+    def sched_point(self, w: Worker) -> bool:
+        """Paper §III-C: drain own-core counters; surrender if >1 ready.
+        Returns True when the worker should park."""
+        if not self.umt or not isinstance(w, Worker):
+            return False
+        if self.notify == "idle_only":
+            # v2 kernel exposes the per-core ready count read-only; the
+            # eventfd only carries idle/busy edges.
+            with self._krun_lock:
+                over = self._krun[w.core] > 1
+            if over:
+                self.stats_extra["surrenders"] += 1
+                self.tracer.ev("surrender", w.wid, w.core)
+            return over
+        self.drain_core(w.core)
+        with self._count_lock:
+            over = self.ready_count[w.core] > 1
+        if over:
+            self.stats_extra["surrenders"] += 1
+            self.tracer.ev("surrender", w.wid, w.core)
+            return True
+        return False
+
+    # ------------------------------------------------------------ parking
+    def parked(self, w: Worker) -> bool:
+        with self._pool_lock:
+            return w in self._pool
+
+    def park(self, w: Worker, force: bool = False) -> bool:
+        """Return worker to the idle pool; blocks (monitored). Returns
+        False when the runtime is shutting down.
+
+        ``force=True`` (self-surrender) skips the lost-wakeup recheck —
+        the worker *wants* to leave the core even though work is pending.
+        """
+        if not self.running:
+            return False
+        with self._pool_lock:
+            self._pool.append(w)
+        if not force and len(self.ready) > 0:
+            # lost-wakeup guard: work arrived between pop() and park
+            with self._pool_lock:
+                if w in self._pool:
+                    self._pool.remove(w)
+                    return self.running     # loop around and re-pop
+            # someone woke us already: fall through and eat the token
+        io.acquire(w.sem)          # ← monitored block; migration-aware wake
+        return self.running
+
+    # ------------------------------------------------------------ waiting
+    def taskwait(self):
+        """Wait for the current task's children (or all tasks if called
+        from outside).  A scheduling point and a monitored block."""
+        w = current_worker()
+        if isinstance(w, Worker) and w.rt is self and w.current_task:
+            ev = w.current_task.child_done_ev
+            io.wait(ev)
+            self.sched_point(w)
+        else:
+            self.wait_all()
+
+    def taskyield(self):
+        """Scheduling point (paper §IV-B: cheap oversubscription check)."""
+        w = current_worker()
+        if isinstance(w, Worker) and w.rt is self:
+            self.drain_core(w.core)
+
+    def wait_all(self, timeout=None):
+        return self._quiet.wait(timeout)
+
+    # ------------------------------------------------------------ stats
+    def stats(self) -> dict:
+        s = self.tracer.stats(self.n_cores)
+        s.update(self.stats_extra)
+        s["n_workers"] = len(self._workers)
+        s["umt"] = self.umt
+        return s

@@ -1,0 +1,116 @@
+"""Nanos6-style task model: tasks with in/out data dependencies, nesting,
+taskwait — the scheduling-point surface UMT hooks into.
+
+Dependency semantics (OmpSs-2 subset): ``in_``/``out`` are hashable keys.
+A reader depends on the last writer of each key; a writer depends on the
+last writer *and* every reader since (WAR+WAW), i.e. the standard
+serialisation of data accesses.
+"""
+from __future__ import annotations
+
+import collections
+import itertools
+import threading
+
+_ids = itertools.count()
+
+
+class Task:
+    __slots__ = ("tid", "fn", "args", "kwargs", "name", "in_", "out",
+                 "pending", "succs", "parent", "children_left",
+                 "child_done_ev", "done_ev", "result", "exc", "state")
+
+    def __init__(self, fn, args, kwargs, in_, out, name, parent):
+        self.tid = next(_ids)
+        self.fn = fn
+        self.args = args
+        self.kwargs = kwargs
+        self.name = name or getattr(fn, "__name__", "task")
+        self.in_ = tuple(in_)
+        self.out = tuple(out)
+        self.pending = 0           # unfinished predecessors
+        self.succs = []
+        self.parent = parent
+        self.children_left = 0
+        self.child_done_ev = threading.Event()
+        self.child_done_ev.set()
+        self.done_ev = threading.Event()
+        self.result = None
+        self.exc = None
+        self.state = "created"
+
+    def wait(self):
+        """Block until the task completes (monitored if inside a worker)."""
+        from .monitor import io
+        io.wait(self.done_ev)
+        if self.exc is not None:
+            raise self.exc
+        return self.result
+
+    def __repr__(self):
+        return f"<Task {self.tid} {self.name} {self.state}>"
+
+
+class DependencyTracker:
+    """Per-key last-writer / readers-since-write bookkeeping."""
+
+    def __init__(self):
+        self._last_writer: dict = {}
+        self._readers: dict = collections.defaultdict(list)
+        self.lock = threading.Lock()
+
+    def register(self, task: Task) -> int:
+        """Wire `task` into the graph; returns #unfinished predecessors."""
+        preds = set()
+        with self.lock:
+            for k in task.in_:
+                w = self._last_writer.get(k)
+                if w is not None and not w.done_ev.is_set():
+                    preds.add(w)
+                self._readers[k].append(task)
+            for k in task.out:
+                w = self._last_writer.get(k)
+                if w is not None and not w.done_ev.is_set():
+                    preds.add(w)
+                for r in self._readers[k]:
+                    if r is not task and not r.done_ev.is_set():
+                        preds.add(r)
+                self._readers[k] = []
+                self._last_writer[k] = task
+            n = 0
+            for p in preds:
+                # re-check under p's publication through scheduler lock:
+                p.succs.append(task)
+                n += 1
+            task.pending = n
+        return n
+
+
+class ReadyQueue:
+    """FIFO ready queue with a condition variable for sleeping workers."""
+
+    def __init__(self):
+        self._q = collections.deque()
+        self.lock = threading.Lock()
+
+    def push(self, task: Task):
+        with self.lock:
+            task.state = "ready"
+            self._q.append(task)
+
+    def push_front(self, task: Task):
+        with self.lock:
+            task.state = "ready"
+            self._q.appendleft(task)
+
+    def pop(self):
+        with self.lock:
+            if self._q:
+                t = self._q.popleft()
+                t.state = "claimed"
+                return t
+        return None
+
+    def __len__(self):
+        with self.lock:
+            return len(self._q)

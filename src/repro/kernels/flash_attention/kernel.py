@@ -1,0 +1,124 @@
+"""Tiled flash attention (online softmax) for TPU.
+
+Grid: (batch*q_heads, n_q_blocks, n_kv_blocks) — the last grid dim is
+sequential on TPU, so the (m, l, acc) running statistics live in VMEM
+scratch and carry across kv blocks.  GQA is handled in the K/V BlockSpec
+index maps (q-head h reads kv-head h // group), so the expanded K/V is
+never materialised.  Causal and sliding-window masks are applied in-kernel;
+fully-masked kv blocks skip their matmuls via ``pl.when``.
+
+VMEM working set per program:
+    q (bq, d) + k (bk, d) + v (bk, d) + acc (bq, d) f32 + s (bq, bk) f32
+with the default bq=bk=256, d<=128 this is ~0.7 MB — well inside the
+~16 MB v5e VMEM budget, and every matmul dim is a multiple of the 128-lane
+MXU tiling (d is padded by the caller if needed).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, causal, window, block_q, block_k, n_k):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+    # skip kv blocks entirely above the causal diagonal / outside window
+    relevant = True
+    if causal:
+        relevant = k_start <= q_start + block_q - 1
+    if window is not None:
+        relevant = relevant & (k_start + block_k - 1 > q_start - window)
+
+    @pl.when(relevant)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # (bq, bk)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1)
+        acc_scr[...] = (acc_scr[...] * alpha[:, None] +
+                        jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == n_k - 1)
+    def _final():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)     # fully-masked rows -> zeros
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal=True, window=None, scale=None,
+                         block_q=256, block_k=256, interpret=False):
+    """q: (BH, Sq, D); k/v: (BHkv, Sk, D) with BH % BHkv == 0."""
+    bh, sq, d = q.shape
+    bhk, sk, _ = k.shape
+    group = bh // bhk
+    scale = (d ** -0.5) if scale is None else scale
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    n_q = pl.cdiv(sq, block_q)
+    n_k = pl.cdiv(sk, block_k)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_k=n_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, q_, k_: (b, q_, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda b, q_, k_, g=group: (b // g, k_, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda b, q_, k_, g=group: (b // g, k_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, q_, k_: (b, q_, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,33 @@
+"""jit'd public wrapper: (B, S, H, D) layout in, GQA-aware, auto-interpret
+on non-TPU backends (validation mode)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_bhsd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
+                    block_q=256, block_k=256, interpret=None):
+    """q: (B, Sq, H, D); k/v: (B, Sk, Hkv, D) -> (B, Sq, H, D)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, sk, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, sk, d)
+    of = flash_attention_bhsd(qf, kf, vf, causal=causal, window=window,
+                              scale=scale, block_q=block_q, block_k=block_k,
+                              interpret=interpret)
+    return of.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,18 @@
+"""jit'd wrapper: any (..., D) shape."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import rms_norm_2d
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rms_norm(x, w, eps=1e-5, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    out = rms_norm_2d(x2, w, eps=eps, interpret=interpret)
+    return out.reshape(shape)

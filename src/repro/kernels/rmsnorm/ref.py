@@ -1,0 +1,6 @@
+"""Pure-jnp oracle (same math as repro.models.layers.rms_norm)."""
+from ...models.layers import rms_norm as _rms_norm
+
+
+def rms_norm_ref(x, w, eps=1e-5):
+    return _rms_norm(x, w, eps)

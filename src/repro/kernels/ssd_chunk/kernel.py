@@ -1,0 +1,100 @@
+"""Mamba2 SSD chunk scan for TPU.
+
+Grid: (B*H, n_chunks) — chunks are the sequential (last) grid dim, so the
+inter-chunk SSM state h (P, N) lives in f32 VMEM scratch and carries across
+chunk iterations; no HBM round-trip for the recurrence.  Per chunk the
+kernel computes the within-chunk (diag) term via the L-masked C·Bᵀ matmul
+and the cross-chunk (off-diag) term from the carried state, then updates
+the state — the exact chunked-SSD factorisation of ref.py.
+
+VMEM per program (Q=chunk len, P=head dim, N=state):
+    x,dtc (Q,P)+(Q,) + B,C (Q,N)*2 + L (Q,Q) f32 + state (P,N) f32
+Q=128..256, P=64, N=128 -> ~0.5 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_out_ref, h_scr, *,
+            n_chunks, chunk):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (Q,)
+    a = a_ref[0]                              # (1,) f32 (negative)
+    bmat = b_ref[0].astype(jnp.float32)       # (Q, N)
+    cmat = c_ref[0].astype(jnp.float32)       # (Q, N)
+
+    adt = dt * a[0]                           # (Q,) <= 0
+    cum = jnp.cumsum(adt)                     # inclusive
+    xdt = x * dt[:, None]
+
+    # within-chunk: L_ij = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, None] - cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    ldec = jnp.where(ii >= jj, jnp.exp(diff), 0.0)
+    cb = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q,Q)
+    y = jax.lax.dot_general(cb * ldec, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (Q,P)
+
+    # cross-chunk: y += exp(cum_i) * C_i . h_prev^T   (h: (P,N))
+    y = y + jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        cmat, h_scr[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    # state update: h = exp(cum_Q) h + sum_j exp(cum_Q - cum_j) xdt_j B_j^T
+    seg = jnp.exp(cum[-1] - cum)              # (Q,)
+    h_new = (h_scr[...] * jnp.exp(cum[-1]) +
+             jax.lax.dot_general(xdt * seg[:, None], bmat,
+                                 (((0,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32))
+    h_scr[...] = h_new
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _final():
+        h_out_ref[0] = h_new.astype(h_out_ref.dtype)
+
+
+def ssd_scan_bh(x, dt, a, bmat, cmat, *, chunk, interpret=False):
+    """x: (BH, S, P); dt: (BH, S); a: (BH, 1); b/c: (BH, S, N).
+    Returns (y: (BH, S, P), h_final: (BH, P, N))."""
+    bh, s, p = x.shape
+    n = bmat.shape[-1]
+    chunk = min(chunk, s)
+    nc = pl.cdiv(s, chunk)
+
+    kernel = functools.partial(_kernel, n_chunks=nc, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk), lambda b, c: (b, c)),
+            pl.BlockSpec((1, 1), lambda b, c: (b, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, p, n), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, p), x.dtype),
+            jax.ShapeDtypeStruct((bh, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, bmat, cmat)

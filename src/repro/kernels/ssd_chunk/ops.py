@@ -1,0 +1,29 @@
+"""jit'd public wrapper over the SSD chunk kernel, (B, S, H, ...) layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_scan_bh
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a, bmat, cmat, *, chunk=256, interpret=None):
+    """x: (B,S,H,P); dt: (B,S,H) f32; a: (H,) f32; b/c: (B,S,H,N).
+    Returns (y: (B,S,H,P), h_final: (B,H,P,N) f32)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    flat = lambda t: t.transpose(0, 2, 1, 3).reshape(b * h, s, t.shape[-1])
+    xf = flat(x)
+    bf = flat(bmat)
+    cf = flat(cmat)
+    dtf = dt.transpose(0, 2, 1).reshape(b * h, s).astype(jnp.float32)
+    af = jnp.broadcast_to(a.astype(jnp.float32), (b, h)).reshape(b * h, 1)
+    y, hf = ssd_scan_bh(xf, dtf, af, bf, cf, chunk=chunk,
+                        interpret=interpret)
+    y = y.reshape(b, h, s, p).transpose(0, 2, 1, 3)
+    return y, hf.reshape(b, h, p, n)

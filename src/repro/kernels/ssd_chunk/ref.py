@@ -1,0 +1,16 @@
+"""Pure-jnp oracle: the chunked SSD scan from repro.models.ssm."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...models.ssm import ssd_chunked
+
+
+def ssd_scan_ref(x, dt, a, bmat, cmat, *, chunk):
+    """x: (B, S, H, P); dt: (B, S, H); a: (H,); b/c: (B, S, H, N).
+    Returns (y, h_final) matching models.ssm.ssd_chunked with zero init."""
+    b, s, h, p = x.shape
+    init = jnp.zeros((b, h, p, bmat.shape[-1]), jnp.float32)
+    y, hf = ssd_chunked(x, dt.astype(jnp.float32), a.astype(jnp.float32),
+                        bmat, cmat, chunk, init)
+    return y, hf

@@ -1,0 +1,179 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede every other import: jax locks device count at first init.
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs import REGISTRY, SHAPES, get, shapes_for     # noqa: E402
+from ..steps import (make_prefill_step, make_serve_step,    # noqa: E402
+                     make_train_step)
+from .hlo_analysis import (Roofline, model_flops,           # noqa: E402
+                           total_params)
+from .hlo_cost import HloCost                               # noqa: E402
+from .mesh import make_production_mesh                      # noqa: E402
+from .specs import input_specs                              # noqa: E402
+
+
+def lower_cell(cfg, shape, mesh):
+    """Lower + compile one (arch x shape) cell on `mesh`."""
+    specs, shardings = input_specs(cfg, shape, mesh)
+    rep = NamedSharding(mesh, P())
+    if shape.kind == "train":
+        fn = make_train_step(cfg, mesh)
+        out_shardings = ({"params": shardings["state"]["params"],
+                          "opt": shardings["state"]["opt"],
+                          "step": rep},
+                         {"loss": rep, "grad_norm": rep, "lr": rep})
+        jf = jax.jit(fn, in_shardings=(shardings["state"],
+                                       shardings["batch"]),
+                     out_shardings=out_shardings)
+        lowered = jf.lower(specs["state"], specs["batch"])
+    elif shape.kind == "prefill":
+        fn = make_prefill_step(cfg, mesh)
+        in_sh = [shardings["params"], shardings["tokens"]]
+        args = [specs["params"], specs["tokens"]]
+        if "patches" in specs:
+            in_sh.append(shardings["patches"])
+            args.append(specs["patches"])
+        jf = jax.jit(fn, in_shardings=tuple(in_sh))
+        lowered = jf.lower(*args)
+    else:  # decode
+        fn = make_serve_step(cfg, mesh)
+        jf = jax.jit(
+            fn,
+            in_shardings=(shardings["params"], shardings["cache"],
+                          shardings["tokens"]),
+            out_shardings=(rep, shardings["cache"]),
+            donate_argnums=(1,))
+        lowered = jf.lower(specs["params"], specs["cache"], specs["tokens"])
+    compiled = lowered.compile()
+    return lowered, compiled
+
+
+def cell_costs(compiled) -> dict:
+    """Per-device costs via the trip-count-aware HLO cost model."""
+    c = HloCost(compiled.as_text()).cost()
+    return {
+        "flops_dev": c.flops,
+        "bytes_dev": c.bytes_min,          # perfect-fusion (TPU-like)
+        "bytes_dev_fused": c.bytes_fused,  # conservative estimate
+        "bytes_dev_unfused": c.bytes,      # CPU-granularity upper bound
+        "coll_per_chip": c.coll_bytes,
+        "coll_by_kind": {k: (v[0], v[1]) for k, v in c.coll_by_kind.items()},
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True, probe: bool = True) -> dict:
+    cfg = get(arch)
+    shape = SHAPES[shape_name]
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return {"arch": arch, "shape": shape_name, "skipped":
+                "full-attention arch; long_500k needs sub-quadratic"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    lowered, compiled = lower_cell(cfg, shape, mesh)
+    dt = time.time() - t0
+    mem = compiled.memory_analysis()
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "compile_s": round(dt, 1),
+        "bytes_per_device": {
+            "argument": getattr(mem, "argument_size_in_bytes", None),
+            "output": getattr(mem, "output_size_in_bytes", None),
+            "temp": getattr(mem, "temp_size_in_bytes", None),
+            "peak": (getattr(mem, "argument_size_in_bytes", 0) +
+                     getattr(mem, "temp_size_in_bytes", 0)),
+        },
+        "total_params": total_params(cfg),
+    }
+    if probe:
+        t1 = time.time()
+        costs = cell_costs(compiled)
+        rl = Roofline(flops=costs["flops_dev"] * chips,
+                      hbm_bytes=costs["bytes_dev"] * chips,
+                      coll_bytes_per_chip=costs["coll_per_chip"],
+                      chips=chips)
+        mf = model_flops(cfg, shape)
+        rec.update({
+            "analysis_s": round(time.time() - t1, 1),
+            "roofline": rl.as_dict(),
+            "hbm_bytes_fused_global": costs["bytes_dev_fused"] * chips,
+            "hbm_bytes_unfused_global": costs["bytes_dev_unfused"] * chips,
+            "collectives": costs["coll_by_kind"],
+            "model_flops": mf,
+            "useful_flops_ratio": (mf / rl.flops) if rl.flops else None,
+        })
+    if verbose:
+        print(json.dumps(rec, indent=2))
+        print(mem)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-probe", action="store_true",
+                    help="skip roofline probes (lower+compile only)")
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    args = ap.parse_args()
+
+    done = set()
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                if "error" not in r:
+                    done.add((r["arch"], r["shape"], r.get("mesh", "")))
+
+    archs = list(REGISTRY) if args.arch == "all" else [args.arch]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    for arch in archs:
+        cfg = get(arch)
+        shapes = ([s.name for s in shapes_for(cfg)] if args.shape == "all"
+                  else [args.shape])
+        for sn in shapes:
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                if (arch, sn, mesh_name) in done:
+                    print(f"skip cached {arch} {sn} {mesh_name}")
+                    continue
+                try:
+                    rec = run_cell(arch, sn, mp, verbose=False,
+                                   probe=not args.no_probe)
+                except Exception as e:  # noqa: BLE001
+                    rec = {"arch": arch, "shape": sn, "mesh": mesh_name,
+                           "error": f"{type(e).__name__}: {e}"}
+                results.append(rec)
+                line = json.dumps(rec)
+                print(line[:300])
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(line + "\n")
+    errs = [r for r in results if "error" in r]
+    print(f"\n{len(results) - len(errs)}/{len(results)} cells OK")
+    if errs:
+        for e in errs:
+            print("ERROR:", e["arch"], e["shape"], e["mesh"],
+                  e["error"][:200])
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,221 @@
+"""Post-SPMD HLO analysis: collective-bytes extraction + roofline terms.
+
+``compiled.as_text()`` (after partitioning) has per-device shapes.  For each
+collective we convert the result shape into *bytes moved per chip* with the
+standard ring formulas, then report both per-chip and global totals.
+
+v5e hardware constants (the brief's numbers): 197 TFLOP/s bf16 per chip,
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+LINK_BW = 50e9             # bytes/s / link (per-chip effective in formulas)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_EXPLICIT_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _result_bytes(line: str) -> int:
+    """Sum of the result-tuple element sizes on an HLO instruction line."""
+    lhs = line.split(" = ", 1)
+    if len(lhs) != 2:
+        return 0
+    rhs = lhs[1]
+    # result type is the text before the op name token
+    for op in _COLLECTIVES:
+        i = rhs.find(op)
+        if i > 0:
+            rhs = rhs[:i]
+            break
+    return sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(rhs))
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _EXPLICIT_GROUPS_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip()]
+        return max(1, len(ids))
+    return 1
+
+
+@dataclass
+class CollectiveStats:
+    per_chip_bytes: float = 0.0          # ring-model bytes crossing links
+    payload_bytes: float = 0.0           # raw result-shape bytes (per chip)
+    by_kind: dict = field(default_factory=dict)
+    count: int = 0
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if " = " not in s:
+            continue
+        kind = None
+        for op in _COLLECTIVES:
+            if re.search(rf"\s{op}(-start)?\(", s) or f" {op}(" in s:
+                kind = op
+                break
+        if kind is None or f"{kind}-done" in s:
+            continue
+        size = _result_bytes(s)
+        n = _group_size(s)
+        if n <= 1 or size == 0:
+            continue
+        frac = (n - 1) / n
+        if kind == "all-reduce":
+            moved = 2 * size * frac
+        elif kind == "collective-permute":
+            moved = size
+        else:  # all-gather / reduce-scatter / all-to-all
+            moved = size * frac
+        st.per_chip_bytes += moved
+        st.payload_bytes += size
+        k = st.by_kind.setdefault(kind, [0, 0.0])
+        k[0] += 1
+        k[1] += moved
+        st.count += 1
+    return st
+
+
+@dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    coll_bytes_per_chip: float
+    chips: int
+
+    @property
+    def t_compute(self):
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self):
+        return self.hbm_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self):
+        return self.coll_bytes_per_chip / LINK_BW
+
+    @property
+    def bottleneck(self):
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    def as_dict(self):
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "flops_global": self.flops,
+            "hbm_bytes_global": self.hbm_bytes,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "chips": self.chips,
+        }
+
+
+def measure(compiled) -> dict:
+    """Raw per-device cost numbers from one compiled executable.
+
+    NOTE: XLA's HloCostAnalysis counts while-loop (lax.scan) bodies ONCE,
+    so these numbers are only meaningful for *probe* modules (n_repeats=1/2,
+    accum=1/2); the dry-run composes them linearly — see dryrun.probe_cell.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    st = collective_stats(compiled.as_text())
+    return {
+        "flops_dev": float(ca.get("flops", 0.0)),
+        "bytes_dev": float(ca.get("bytes accessed", 0.0)),
+        "coll_per_chip": st.per_chip_bytes,
+        "coll_by_kind": {k: (v[0], v[1]) for k, v in st.by_kind.items()},
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D for train (N = active params, D = tokens);
+    2·N·D for inference steps."""
+    n_active = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.batch * shape.seq
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.batch * shape.seq
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.batch  # decode: one token per sequence
+
+
+def _attn_params(cfg, spec) -> float:
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if spec.attn == "mla":
+        rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+        dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+        return (d * rq + rq * h * (dn + dr) + d * (rkv + dr) +
+                rkv * h * dn + rkv * h * dv + h * dv * d)
+    return d * h * dh + 2 * d * hkv * dh + h * dh * d
+
+
+def _ssm_params(cfg) -> float:
+    d, di = cfg.d_model, cfg.d_inner
+    cd = di + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return d * di + d * cd + d * cfg.ssm_nheads + di * d
+
+
+def _mlp_params(cfg, spec, active: bool) -> float:
+    if spec.mlp == "none":
+        return 0.0
+    dense = 3 * cfg.d_model * cfg.d_ff
+    if spec.mlp == "dense":
+        return dense
+    e = cfg.top_k if active else cfg.n_experts
+    return e * dense + cfg.d_model * cfg.n_experts
+
+
+def _params_count(cfg, active: bool) -> float:
+    total = 0.0
+    for spec in cfg.pattern:
+        mix = _ssm_params(cfg) if spec.kind == "ssm" else _attn_params(
+            cfg, spec)
+        total += mix + _mlp_params(cfg, spec, active)
+    total *= cfg.n_repeats
+    emb = cfg.vocab * cfg.d_model * cfg.n_codebooks
+    total += 2 * emb  # embed + head
+    return total
+
+
+def active_params(cfg) -> float:
+    return _params_count(cfg, active=True)
+
+
+def total_params(cfg) -> float:
+    return _params_count(cfg, active=False)

@@ -1,0 +1,336 @@
+"""Trip-count-aware cost model over post-partitioning HLO text.
+
+XLA's HloCostAnalysis counts while-loop (lax.scan) bodies ONCE, which makes
+it useless for scan-over-layers modules.  This module re-derives the three
+roofline inputs directly from ``compiled.as_text()``:
+
+  * flops        — 2*prod(result)*prod(contracting) per dot, elementwise ops
+                   at 1 flop/element, multiplied through while trip counts;
+  * hbm bytes    — operand+result bytes of every *executed* instruction at
+                   call-site level (fusion internals excluded — they don't
+                   touch HBM); dynamic-update-slice charged at update size;
+  * collectives  — ring-model bytes per chip per op, trip-count scaled.
+
+Trip counts come from each while's condition computation (compare-LT against
+a constant, lax.scan's canonical form).  Everything is per-device (the text
+is post-SPMD), so global = value * n_devices.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "u1": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.*?)\s*([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?(%?[\w.\-]+)\s*\(.*\)\s*->.*\{")
+_OPERAND_RE = re.compile(r"(%[\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|to_apply|body|condition|branch_computations)=\{?"
+    r"(%?[\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_EXPLICIT_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+COLLECTIVE_OPS = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute", "all-gather-start",
+                  "all-reduce-start", "collective-permute-start"}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "rsqrt",
+    "sqrt", "tanh", "logistic", "negate", "abs", "sign", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "compare", "select", "and",
+    "or", "xor", "not", "clamp", "atan2", "cosine", "sine", "erf",
+    "cbrt", "remainder", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic",
+}
+
+_ZERO_BYTE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "opt-barrier",
+}
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _parse_type(text: str):
+    """-> (elems, bytes) summed over every dtype[...] in `text`."""
+    elems = bytes_ = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        e = _shape_elems(dims)
+        elems += e
+        bytes_ += e * _DTYPE_BYTES[dt]
+    return elems, bytes_
+
+
+@dataclass
+class Instr:
+    name: str
+    op: str
+    result_elems: int
+    result_bytes: int
+    line: str
+    operands: list[str] = field(default_factory=list)
+    calls: list[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list = field(default_factory=list)
+    table: dict = field(default_factory=dict)   # %name -> (elems, bytes)
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0          # CPU-fusion granularity (upper bound)
+    bytes_fused: float = 0.0    # TPU-fusion estimate (elementwise fused away)
+    bytes_min: float = 0.0      # perfect-fusion lower bound (see HloCost)
+    coll_bytes: float = 0.0     # ring-model, per chip
+    coll_by_kind: dict = field(default_factory=dict)
+    bytes_by_op: dict = field(default_factory=dict)   # fused-est breakdown
+    coll_top: list = field(default_factory=list)      # (moved, kind, line)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.bytes_fused += other.bytes_fused * mult
+        self.bytes_min += other.bytes_min * mult
+        self.coll_bytes += other.coll_bytes * mult
+        for k, (c, b) in other.coll_by_kind.items():
+            cur = self.coll_by_kind.setdefault(k, [0.0, 0.0])
+            cur[0] += c * mult
+            cur[1] += b * mult
+        for k, b in other.bytes_by_op.items():
+            self.bytes_by_op[k] = self.bytes_by_op.get(k, 0.0) + b * mult
+        for moved, kind, line in other.coll_top:
+            self.coll_top.append((moved * mult, kind, line))
+        self.coll_top.sort(key=lambda t: -t[0])
+        del self.coll_top[12:]
+
+
+# ops whose traffic a TPU fusion pass would fold into neighbours
+_FUSED_AWAY = _ELEMENTWISE | {
+    "broadcast", "reshape", "iota", "convert", "reduce-precision",
+    "bitcast-convert", "select-and-scatter",
+}
+
+
+def parse_module(text: str):
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and ("parameter(" not in line or line.endswith("{")):
+            name = hdr.group(2)
+            cur = Computation(name=name)
+            comps[name] = cur
+            if hdr.group(1):
+                entry = name
+            continue
+        if line.startswith("}"):
+            continue
+        m = _INSTR_RE.match(line)
+        if not m or cur is None:
+            continue
+        name, rtype, op, rest = m.groups()
+        elems, bts = _parse_type(rtype)
+        # operands: %refs inside the parens, before attribute section
+        paren = rest.split(")", 1)[0]
+        operands = _OPERAND_RE.findall(paren)
+        calls = []
+        for cm in _CALL_ATTR_RE.finditer(rest):
+            calls += [c.strip() for c in cm.group(1).split(",")]
+        ins = Instr(name=name, op=op, result_elems=elems, result_bytes=bts,
+                    line=line, operands=operands, calls=calls)
+        cur.instrs.append(ins)
+        cur.table[name] = (elems, bts)
+    return comps, entry
+
+
+def _trip_count(cond: Computation) -> float:
+    """lax.scan canonical condition: compare(%iv, %const), direction=LT."""
+    const_vals = {}
+    for ins in cond.instrs:
+        if ins.op == "constant":
+            cm = re.search(r"constant\((-?\d+)\)", ins.line)
+            if cm:
+                const_vals[ins.name] = int(cm.group(1))
+    for ins in cond.instrs:
+        if ins.op == "compare" and "direction=LT" in ins.line:
+            for opnd in ins.operands:
+                if opnd in const_vals:
+                    return float(max(1, const_vals[opnd]))
+    return 1.0
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _EXPLICIT_GROUPS_RE.search(line)
+    if m:
+        return max(1, len([x for x in m.group(1).split(",") if x.strip()]))
+    return 1
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    cm = _CONTRACT_RE.search(ins.line)
+    contract = 1
+    if cm and ins.operands:
+        lhs = ins.operands[0]
+        lhs_line = next((i.line for i in comp.instrs if i.name == lhs), "")
+        sm = _SHAPE_RE.search(lhs_line.split(" = ", 1)[-1]) \
+            if " = " in lhs_line else None
+        dims = []
+        if sm:
+            dims = [int(d) for d in sm.group(2).split(",") if d]
+        for idx in cm.group(1).split(","):
+            if idx and dims and int(idx) < len(dims):
+                contract *= dims[int(idx)]
+    return 2.0 * ins.result_elems * contract
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_module(text)
+        self._memo: dict[tuple[str, bool], Cost] = {}
+
+    def _operand_bytes(self, ins: Instr, comp: Computation) -> int:
+        total = 0
+        for o in ins.operands:
+            eb = comp.table.get(o)
+            if eb:
+                total += eb[1]
+        return total
+
+    def comp_cost(self, name: str, executed: bool) -> Cost:
+        key = (name, executed)
+        if key in self._memo:
+            return self._memo[key]
+        self._memo[key] = Cost()          # break cycles defensively
+        comp = self.comps.get(name)
+        if comp is None:
+            return Cost()
+        total = Cost()
+        for ins in comp.instrs:
+            op = ins.op
+            base = op[:-6] if op.endswith("-start") else op
+            # ---- flops
+            if op == "dot":
+                total.flops += _dot_flops(ins, comp)
+            elif op in ("reduce", "reduce-window"):
+                total.flops += sum(comp.table.get(o, (0, 0))[0]
+                                   for o in ins.operands[:1])
+            elif op in _ELEMENTWISE:
+                total.flops += ins.result_elems
+            elif op == "sort":
+                total.flops += 5.0 * ins.result_elems
+            # ---- collectives
+            if base in ("all-gather", "all-reduce", "reduce-scatter",
+                        "all-to-all", "collective-permute") \
+                    and not op.endswith("-done"):
+                n = _group_size(ins.line)
+                if n > 1:
+                    frac = (n - 1) / n
+                    size = ins.result_bytes
+                    # CPU legalises bf16 dots to f32, so partial-sum
+                    # collectives appear as f32 ("..._promoted" appliers).
+                    # On TPU the dot emits bf16 and the collective carries
+                    # half the bytes — count the TPU payload.
+                    if "promoted" in ins.line:
+                        size = size // 2
+                    if base == "all-reduce":
+                        moved = 2 * size * frac
+                    elif base == "collective-permute":
+                        moved = size
+                    else:
+                        moved = size * frac
+                    total.coll_bytes += moved
+                    k = total.coll_by_kind.setdefault(base, [0.0, 0.0])
+                    k[0] += 1
+                    k[1] += moved
+                    total.coll_top.append((moved, base, ins.line[:160]))
+                    total.coll_top.sort(key=lambda t: -t[0])
+                    del total.coll_top[12:]
+            # ---- bytes (call-site level only)
+            # Three traffic models:
+            #   bytes       — operands+results of every executed op at CPU
+            #                 fusion granularity (upper bound);
+            #   bytes_fused — same, minus ops a TPU fusion pass folds away;
+            #   bytes_min   — perfect fusion: each buffer written once
+            #                 (result bytes), reads only charged where a
+            #                 reload is certain (dot/conv operands: weights
+            #                 are re-read per use).
+            if executed and op not in _ZERO_BYTE_OPS:
+                if op == "dynamic-update-slice":
+                    upd = (comp.table.get(ins.operands[1], (0, 0))[1]
+                           if len(ins.operands) > 1 else 0)
+                    total.bytes += 2 * upd
+                    total.bytes_fused += 2 * upd
+                    total.bytes_min += 2 * upd
+                elif op not in ("while", "conditional", "call"):
+                    b = self._operand_bytes(ins, comp) + ins.result_bytes
+                    total.bytes += b
+                    if op not in _FUSED_AWAY:
+                        total.bytes_fused += b
+                        total.bytes_by_op[op] = \
+                            total.bytes_by_op.get(op, 0.0) + b
+                        if op in ("dot", "convolution"):
+                            total.bytes_min += b
+                        else:
+                            total.bytes_min += ins.result_bytes
+            # ---- nested computations
+            if op == "while" and ins.calls:
+                cm = re.search(r"condition=(%?[\w.\-]+)", ins.line)
+                bm = re.search(r"body=(%?[\w.\-]+)", ins.line)
+                cond = cm.group(1) if cm else ins.calls[0]
+                body = bm.group(1) if bm else ins.calls[-1]
+                ktc = re.search(r'"known_trip_count":\{"n":"(\d+)"', ins.line)
+                if ktc:
+                    trips = float(ktc.group(1))
+                else:
+                    trips = _trip_count(
+                        self.comps.get(cond, Computation("")))
+                total.add(self.comp_cost(body, executed), trips)
+            elif op in ("call", "conditional"):
+                for c in ins.calls:
+                    total.add(self.comp_cost(c, executed))
+            elif op == "fusion":
+                for c in ins.calls:
+                    total.add(self.comp_cost(c, False))
+            elif ins.calls and op not in ("while",):
+                # reduce/sort/scatter appliers: tiny; count flops only
+                for c in ins.calls:
+                    total.add(self.comp_cost(c, False))
+        self._memo[key] = total
+        return total
+
+    def cost(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.comp_cost(self.entry, True)
+
+
+def analyze(compiled) -> Cost:
+    return HloCost(compiled.as_text()).cost()

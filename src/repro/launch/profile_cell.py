@@ -1,0 +1,58 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+
+from ..configs import SHAPES, get            # noqa: E402
+from .dryrun import lower_cell                # noqa: E402
+from .hlo_cost import HloCost                 # noqa: E402
+from .mesh import make_production_mesh        # noqa: E402
+
+
+def profile(arch: str, shape_name: str, multi_pod=False, accum=None,
+            remat=None, moe_impl=None, show_mem=False):
+    cfg = get(arch)
+    shape = SHAPES[shape_name]
+    if accum:
+        shape = dataclasses.replace(shape, accum=accum)
+    if remat:
+        cfg = cfg.replace(remat=remat)
+    if moe_impl:
+        cfg = cfg.replace(moe_impl=moe_impl)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    _, compiled = lower_cell(cfg, shape, mesh)
+    if show_mem:
+        print(compiled.memory_analysis())
+    cost = HloCost(compiled.as_text()).cost()
+    print(f"== {arch} {shape_name} ==")
+    print(f"flops/dev: {cost.flops:.3e}  bytes_min/dev: "
+          f"{cost.bytes_min:.3e}  bytes_fused/dev: "
+          f"{cost.bytes_fused:.3e}  coll/chip: {cost.coll_bytes:.3e}")
+    print("-- bytes by op (fused estimate, per dev) --")
+    for op, b in sorted(cost.bytes_by_op.items(), key=lambda t: -t[1])[:12]:
+        print(f"  {op:28s} {b:.3e}")
+    print("-- collectives by kind --")
+    for k, (c, b) in sorted(cost.coll_by_kind.items(),
+                            key=lambda t: -t[1][1]):
+        print(f"  {k:20s} n={c:7.0f} moved/chip={b:.3e}")
+    print("-- top collective ops --")
+    for moved, kind, line in cost.coll_top:
+        print(f"  {moved:.3e} {kind}: {line[:150]}")
+    return cost
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--moe-impl", default=None)
+    ap.add_argument("--mem", action="store_true")
+    a = ap.parse_args()
+    profile(a.arch, a.shape, a.multi_pod, a.accum, a.remat, a.moe_impl,
+            a.mem)

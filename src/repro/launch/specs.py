@@ -1,0 +1,142 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+``input_specs`` never allocates device memory — it produces the exact pytree
+of ShapeDtypeStructs the dry-run lowers against, plus the matching
+NamedShardings for in_shardings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, RunShape
+from ..models.lm import cache_meta, meta_axes, meta_shape_structs, param_meta
+from ..sharding import logical_sharding
+from ..steps import DECODE_RULES
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _token_shape(cfg: ModelConfig, lead: tuple, seq: int):
+    if cfg.frontend == "audio_codebooks":
+        return lead + (seq, cfg.n_codebooks)
+    return lead + (seq,)
+
+
+def batch_specs(cfg: ModelConfig, shape: RunShape):
+    """Train-batch ShapeDtypeStructs, leaves shaped (accum, micro, ...)."""
+    assert shape.kind == "train"
+    micro = shape.batch // shape.accum
+    lead = (shape.accum, micro)
+    seq = shape.seq - (cfg.n_patches if cfg.frontend == "vision_patches"
+                       else 0)
+    out = {
+        "tokens": _sds(_token_shape(cfg, lead, seq), jnp.int32),
+        "labels": _sds(_token_shape(cfg, lead, seq), jnp.int32),
+    }
+    if cfg.frontend == "vision_patches":
+        out["patches"] = _sds(lead + (cfg.n_patches, cfg.d_model),
+                              jnp.dtype(cfg.dtype))
+    return out
+
+
+def batch_axes(cfg: ModelConfig):
+    out = {"tokens": (None, "batch", "seq"), "labels": (None, "batch", "seq")}
+    if cfg.frontend == "audio_codebooks":
+        out = {k: v + (None,) for k, v in out.items()}
+    if cfg.frontend == "vision_patches":
+        out["patches"] = (None, "batch", None, "embed")
+    return out
+
+
+def state_specs(cfg: ModelConfig):
+    meta = param_meta(cfg)
+    params = meta_shape_structs(meta, jnp.dtype(cfg.param_dtype))
+    opt = {"m": meta_shape_structs(meta, jnp.dtype(cfg.opt_dtype)),
+           "v": meta_shape_structs(meta, jnp.dtype(cfg.opt_dtype))}
+    return {"params": params, "opt": opt, "step": _sds((), jnp.int32)}
+
+
+def serve_param_specs(cfg: ModelConfig):
+    """Inference keeps no f32 masters: params arrive in compute dtype."""
+    return meta_shape_structs(param_meta(cfg), jnp.dtype(cfg.dtype))
+
+
+def state_axes(cfg: ModelConfig):
+    meta = param_meta(cfg)
+    ax = meta_axes(meta)
+    return {"params": ax, "opt": {"m": ax, "v": ax}, "step": ()}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq: int):
+    meta = cache_meta(cfg, batch, seq)
+    return meta_shape_structs(meta, jnp.dtype(cfg.dtype))
+
+
+def cache_axes(cfg: ModelConfig, batch: int, seq: int):
+    return meta_axes(cache_meta(cfg, batch, seq))
+
+
+def decode_specs(cfg: ModelConfig, shape: RunShape):
+    assert shape.kind == "decode"
+    tok = _sds(_token_shape(cfg, (shape.batch,), 1), jnp.int32)
+    return {"tokens": tok, "cache": cache_specs(cfg, shape.batch, shape.seq)}
+
+
+def prefill_specs(cfg: ModelConfig, shape: RunShape):
+    assert shape.kind == "prefill"
+    seq = shape.seq - (cfg.n_patches if cfg.frontend == "vision_patches"
+                       else 0)
+    out = {"tokens": _sds(_token_shape(cfg, (shape.batch,), seq), jnp.int32)}
+    if cfg.frontend == "vision_patches":
+        out["patches"] = _sds((shape.batch, cfg.n_patches, cfg.d_model),
+                              jnp.dtype(cfg.dtype))
+    return out
+
+
+def to_shardings(axes_tree, specs_tree, mesh, rules=None):
+    """Map (logical-axes tree, specs tree) -> NamedSharding tree.
+
+    strict=True: pjit argument shardings must divide dims evenly, so
+    non-divisible axes fall back to replication here (in-model constraints
+    still use the padded variant)."""
+    def mk(ax, spec):
+        return logical_sharding(spec.shape, ax, mesh, rules, strict=True)
+    return jax.tree.map(
+        mk, axes_tree, specs_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def input_specs(cfg: ModelConfig, shape: RunShape, mesh=None):
+    """Returns (kwargs_specs, kwargs_shardings_or_None) for the step fn."""
+    if shape.kind == "train":
+        specs = {"state": state_specs(cfg), "batch": batch_specs(cfg, shape)}
+        axes = {"state": state_axes(cfg), "batch": batch_axes(cfg)}
+        rules = None
+    elif shape.kind == "prefill":
+        specs = prefill_specs(cfg, shape)
+        axes = {"tokens": (("batch", "seq") +
+                           ((None,) if cfg.frontend == "audio_codebooks"
+                            else ()))}
+        if "patches" in specs:
+            axes["patches"] = ("batch", None, "embed")
+        specs = {"params": serve_param_specs(cfg), **specs}
+        axes = {"params": state_axes(cfg)["params"], **axes}
+        rules = None
+    else:  # decode
+        d = decode_specs(cfg, shape)
+        specs = {"params": serve_param_specs(cfg), **d}
+        tok_ax = ("batch", "seq") + ((None,) if cfg.frontend ==
+                                     "audio_codebooks" else ())
+        axes = {"params": state_axes(cfg)["params"],
+                "tokens": tok_ax,
+                "cache": cache_axes(cfg, shape.batch, shape.seq)}
+        rules = DECODE_RULES
+    if mesh is None:
+        return specs, None
+    shardings = to_shardings(axes, specs, mesh, rules)
+    return specs, shardings

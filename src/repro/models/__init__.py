@@ -1,0 +1,5 @@
+from .lm import LM, init_params, param_logical_axes
+from . import layers, attention, moe, ssm
+
+__all__ = ["LM", "init_params", "param_logical_axes", "layers", "attention",
+           "moe", "ssm"]

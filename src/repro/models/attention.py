@@ -1,0 +1,365 @@
+"""Attention family: GQA (+QKV bias, sliding window) and MLA (latent KV).
+
+Three execution paths, chosen by the step being lowered:
+  * ``full``    — materialised scores, train-time (seq <= ~4k).
+  * ``qchunk``  — lax.scan over query chunks, forward-only prefill (32k).
+  * ``decode``  — single query token against a (sequence-sharded) cache.
+
+KV caches are stored unexpanded (n_kv heads); GQA expands K/V to the query
+heads at compute time (bytes are negligible, sharding stays clean).
+SWA uses a ring cache of ``window`` slots; slot ``s`` holds absolute position
+``pos - ((pos - s) mod W)`` so validity/masking need no bookkeeping array.
+MLA decodes in the *absorbed* form (scores against the compressed latent),
+so its cache is (c_kv, k_rope) — the architecture's whole point.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .layers import apply_rope, rms_norm
+
+NEG_INF = -1e30
+
+
+import functools
+import os
+
+# REPRO_BASELINE_ATTN=1 restores the unoptimised (pre-§Perf) formulation so
+# EXPERIMENTS.md can report before/after under one cost model.
+_BASELINE = os.environ.get("REPRO_BASELINE_ATTN") == "1"
+
+
+def _expand_kv_plain(k, n_heads):
+    b, s, hkv, dh = k.shape
+    if hkv == n_heads:
+        return k
+    rep = n_heads // hkv
+    kx = jnp.broadcast_to(k[:, :, :, None, :], (b, s, hkv, rep, dh))
+    return kx.reshape(b, s, n_heads, dh)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _expand_kv_opt(k, n_heads):
+    """(B, S, Hkv, Dh) -> (B, S, H, Dh) by group broadcast.
+
+    custom_vjp: the natural backward (reshape + sum over the group dim)
+    reshapes a head-sharded cotangent and forces a full activation
+    all-gather when H % mesh != 0 (EXPERIMENTS.md §Perf it.3).  Instead the
+    backward contracts against a constant 0/1 group matrix in the compute
+    dtype: sharded partial sums + one small all-reduce.
+    """
+    b, s, hkv, dh = k.shape
+    if hkv == n_heads:
+        return k
+    rep = n_heads // hkv
+    kx = jnp.broadcast_to(k[:, :, :, None, :], (b, s, hkv, rep, dh))
+    return kx.reshape(b, s, n_heads, dh)
+
+
+def _expand_kv_fwd(k, n_heads):
+    return _expand_kv_opt(k, n_heads), k
+
+
+def _expand_kv_bwd(n_heads, k, g):
+    hkv, dtype = k.shape[2], k.dtype
+    if hkv == n_heads:
+        return (g,)
+    gmat = (jnp.arange(n_heads) // (n_heads // hkv) ==
+            jnp.arange(hkv)[:, None]).astype(dtype)        # (Hkv, H)
+    dk = jnp.einsum("bshd,kh->bskd", g.astype(dtype), gmat)
+    return (shard(dk, "batch", "seq", "kv_heads", None),)
+
+
+_expand_kv_opt.defvjp(_expand_kv_fwd, _expand_kv_bwd)
+
+_expand_kv = _expand_kv_plain if _BASELINE else _expand_kv_opt
+
+
+def _mask_bias(sq, sk, q_off, window):
+    """(sq, sk) additive causal(+window) mask. q position = q_off + i."""
+    qi = q_off + jnp.arange(sq)[:, None]
+    kj = jnp.arange(sk)[None, :]
+    ok = kj <= qi
+    if window is not None:
+        ok &= kj > qi - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _sdpa(q, k, v, bias, scale=None):
+    """q: (B,Sq,H,Dh) k/v: (B,Sk,H,Dh) bias: (Sq,Sk). f32 softmax."""
+    scale = (q.shape[-1] ** -0.5) if scale is None else scale
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores * scale + bias
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def full_attention(q, k, v, *, window=None, q_off=0, scale=None):
+    k = _expand_kv(k, q.shape[2])
+    v = _expand_kv(v, q.shape[2])
+    bias = _mask_bias(q.shape[1], k.shape[1], q_off, window)
+    out = _sdpa(q, k, v, bias, scale)
+    return shard(out, "batch", "seq", "heads", "head_dim")
+
+
+def qchunk_attention(q, k, v, *, window=None, chunk=512, scale=None):
+    """Forward-only prefill: scan over query chunks vs full K/V."""
+    b, s, h, dh = q.shape
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    n = max(1, s // chunk)
+    chunk = s // n
+    assert n * chunk == s, (s, chunk)
+    qs = q.reshape(b, n, chunk, h, dh).transpose(1, 0, 2, 3, 4)
+
+    def body(i, qc):
+        bias = _mask_bias(chunk, s, i * chunk, window)
+        return i + 1, _sdpa(qc, k, v, bias, scale)
+
+    _, outs = jax.lax.scan(body, 0, qs)
+    dv = v.shape[-1]
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dv)
+    return shard(out, "batch", "seq", "heads", "head_dim")
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=None, scale=None):
+    """q: (B,1,H,Dh); caches: (B,Sc,Hkv,Dh) sequence-sharded; pos scalar.
+
+    Partial-softmax formulation: every op reduces *over* the sharded
+    sequence dim (max/sum/contraction -> small ARs), so XLA never needs to
+    gather the cache itself (EXPERIMENTS.md §Perf mixtral-decode it.1).
+    """
+    b, _, h, dh = q.shape
+    sc = k_cache.shape[1]
+    kf = shard(_expand_kv(k_cache, h), "batch", "seq_shard", None, None)
+    vf = shard(_expand_kv(v_cache, h), "batch", "seq_shard", None, None)
+    slots = jnp.arange(sc)
+    if window is None:
+        valid = slots <= pos
+    else:
+        slot_pos = pos - jnp.mod(pos - slots, sc)   # ring: sc == window
+        valid = slot_pos >= 0
+    bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+    scale = (dh ** -0.5) if scale is None else scale
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kf).astype(jnp.float32)
+    scores = scores * scale + bias[None, None, None, :]
+    if _BASELINE:
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+    scores = shard(scores, "batch", None, None, "seq_shard")
+    m = jnp.max(scores, axis=-1, keepdims=True)          # reduce over shard
+    p = jnp.exp(scores - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)               # reduce over shard
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(q.dtype), vf)
+    return out / jnp.swapaxes(l, 1, 2).astype(q.dtype)   # (B,1,H,1)
+
+
+# ====================================================================== GQA
+def gqa_param_shapes(cfg):
+    """Weights are stored FLAT — (d, H*dh) — so pjit argument shardings
+    divide evenly for any head count; the model reshapes them head-split
+    at use sites (a cheap per-layer weight reshard for H % mesh != 0) and
+    keeps *activations* head-split end-to-end, so a sharded head dim is
+    never reshaped into a flat feature dim (which would force a full
+    activation all-gather; EXPERIMENTS.md §Perf iterations 2-3)."""
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    shapes = {
+        "ln": ((d,), (None,), "ones"),
+        "wq": ((d, h * dh), ("fsdp", "tp"), "normal"),
+        "wk": ((d, hkv * dh), ("fsdp", "tp"), "normal"),
+        "wv": ((d, hkv * dh), ("fsdp", "tp"), "normal"),
+        "wo": ((h * dh, d), ("tp", "fsdp"), "normal"),
+    }
+    if cfg.qkv_bias:
+        shapes["bq"] = ((h * dh,), ("tp",), "zeros")
+        shapes["bk"] = ((hkv * dh,), ("tp",), "zeros")
+        shapes["bv"] = ((hkv * dh,), ("tp",), "zeros")
+    return shapes
+
+
+def gqa_cache_shapes(cfg, spec, batch, seq):
+    sc = min(seq, spec.window) if spec.window else seq
+    kv = (batch, sc, cfg.n_kv_heads, cfg.head_dim)
+    ax = ("batch", "seq_shard", None, None)
+    return {"k": (kv, ax), "v": (kv, ax)}
+
+
+def _pad_seq(t, target):
+    """Right-pad dim 1 (sequence) with zeros up to `target` slots."""
+    if target is None or t.shape[1] >= target:
+        return t
+    pad = [(0, 0)] * t.ndim
+    pad[1] = (0, target - t.shape[1])
+    return jnp.pad(t, pad)
+
+
+def gqa_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None):
+    """x: (B,S,D) -> (out, new_cache or None). cache: {"k","v"} unexpanded."""
+    b, s, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+
+    d = x.shape[-1]
+    q = jnp.einsum("bsd,dhk->bshk", xn,
+                   p["wq"].astype(dt).reshape(d, h, dh))
+    k = jnp.einsum("bsd,dhk->bshk", xn,
+                   p["wk"].astype(dt).reshape(d, hkv, dh))
+    v = jnp.einsum("bsd,dhk->bshk", xn,
+                   p["wv"].astype(dt).reshape(d, hkv, dh))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt).reshape(h, dh)
+        k = k + p["bk"].astype(dt).reshape(hkv, dh)
+        v = v + p["bv"].astype(dt).reshape(hkv, dh)
+
+    if mode == "decode":
+        if cfg.pos_emb == "rope":
+            q = apply_rope(q, pos, cfg.rope_theta)
+            k = apply_rope(k, pos, cfg.rope_theta)
+        kc, vc = cache["k"], cache["v"]
+        w = spec.window
+        idx = jnp.mod(pos, kc.shape[1]) if w is not None else pos
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                          (0, idx, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                          (0, idx, 0, 0))
+        kc = shard(kc, "batch", "seq_shard", None, None)
+        vc = shard(vc, "batch", "seq_shard", None, None)
+        out = decode_attention(q, kc, vc, pos, window=w)
+        new_cache = {"k": kc, "v": vc}
+    else:
+        q = shard(q, "batch", "seq", "heads", "head_dim")
+        positions = pos + jnp.arange(s)
+        if cfg.pos_emb == "rope":
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        if mode == "prefill":
+            out = qchunk_attention(q, k, v, window=spec.window)
+            w = spec.window
+            if w is not None:
+                if s >= w:
+                    kc, vc = k[:, s - w:], v[:, s - w:]  # ring: slot = pos % W
+                else:
+                    kc, vc = _pad_seq(k, w), _pad_seq(v, w)
+            else:
+                kc, vc = _pad_seq(k, cache_len), _pad_seq(v, cache_len)
+            new_cache = {
+                "k": shard(kc, "batch", "seq_shard", None, None),
+                "v": shard(vc, "batch", "seq_shard", None, None),
+            }
+        else:
+            out = full_attention(q, k, v, window=spec.window)
+            new_cache = None
+
+    out = jnp.einsum("bshk,hkd->bsd", out,
+                     p["wo"].astype(dt).reshape(h, dh, x.shape[-1]))
+    return shard(out, "batch", "seq", "embed"), new_cache
+
+
+# ====================================================================== MLA
+def mla_param_shapes(cfg):
+    d, h = cfg.d_model, cfg.n_heads
+    rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "ln": ((d,), (None,), "ones"),
+        "wq_a": ((d, rq), ("fsdp", None), "normal"),
+        "q_ln": ((rq,), (None,), "ones"),
+        "wq_b": ((rq, h * (dn + dr)), (None, "tp"), "normal"),
+        "wkv_a": ((d, rkv + dr), ("fsdp", None), "normal"),
+        "kv_ln": ((rkv,), (None,), "ones"),
+        "wk_b": ((rkv, h * dn), (None, "tp"), "normal"),
+        "wv_b": ((rkv, h * dv), (None, "tp"), "normal"),
+        "wo": ((h * dv, d), ("tp", "fsdp"), "normal"),
+    }
+
+
+def mla_cache_shapes(cfg, spec, batch, seq):
+    return {
+        "ckv": ((batch, seq, cfg.kv_lora_rank), ("batch", "seq_shard", None)),
+        "krope": ((batch, seq, cfg.qk_rope_dim),
+                  ("batch", "seq_shard", None)),
+    }
+
+
+def _mla_q(xn, p, cfg, dt):
+    h, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    rq = cfg.q_lora_rank
+    qa = rms_norm(jnp.einsum("bsd,dr->bsr", xn, p["wq_a"].astype(dt)),
+                  p["q_ln"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", qa,
+                   p["wq_b"].astype(dt).reshape(rq, h, dn + dr))
+    return q[..., :dn], q[..., dn:]          # q_nope, q_rope
+
+
+def mla_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    rkv, dn, dr, dv = (cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                       cfg.v_head_dim)
+    dt = x.dtype
+    scale = (dn + dr) ** -0.5
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+
+    q_nope, q_rope = _mla_q(xn, p, cfg, dt)
+    kva = jnp.einsum("bsd,dr->bsr", xn, p["wkv_a"].astype(dt))
+    ckv = rms_norm(kva[..., :rkv], p["kv_ln"], cfg.norm_eps)   # (B,S,rkv)
+    k_rope = kva[..., rkv:]                                    # (B,S,dr)
+
+    if mode == "decode":
+        # absorbed decode: scores live in the latent space.
+        q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+        k_rope = apply_rope(k_rope[:, :, None, :], pos,
+                            cfg.rope_theta)[:, :, 0, :]
+        cc, kr = cache["ckv"], cache["krope"]
+        cc = jax.lax.dynamic_update_slice(cc, ckv.astype(cc.dtype),
+                                          (0, pos, 0))
+        kr = jax.lax.dynamic_update_slice(kr, k_rope.astype(kr.dtype),
+                                          (0, pos, 0))
+        cc = shard(cc, "batch", "seq_shard", None)
+        kr = shard(kr, "batch", "seq_shard", None)
+        wk_b = p["wk_b"].astype(dt).reshape(rkv, h, dn)
+        # absorb q_nope through wk_b:  (B,1,H,rkv)
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, wk_b)
+        scores = (jnp.einsum("bshr,btr->bhst", q_lat, cc) +
+                  jnp.einsum("bshr,btr->bhst", q_rope, kr))
+        scores = scores.astype(jnp.float32) * scale
+        valid = jnp.arange(cc.shape[1]) <= pos
+        scores = scores + jnp.where(valid, 0.0, NEG_INF)[None, None, None, :]
+        probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+        lat = jnp.einsum("bhst,btr->bshr", probs, cc)          # (B,1,H,rkv)
+        out = jnp.einsum("bshr,rhv->bshv", lat,
+                         p["wv_b"].astype(dt).reshape(rkv, h, dv))
+        new_cache = {"ckv": cc, "krope": kr}
+    else:
+        positions = pos + jnp.arange(s)
+        q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+        k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                            cfg.rope_theta)[:, :, 0, :]
+        k_nope = jnp.einsum("bsr,rhk->bshk", ckv,
+                            p["wk_b"].astype(dt).reshape(rkv, h, dn))
+        vfull = jnp.einsum("bsr,rhk->bshk", ckv,
+                           p["wv_b"].astype(dt).reshape(rkv, h, dv))
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (b, s, h, dr))], axis=-1)
+        q = shard(q, "batch", "seq", "heads", "head_dim")
+        k = shard(k, "batch", "seq", "heads", "head_dim")
+        if mode == "prefill":
+            out = qchunk_attention(q, k, vfull, scale=scale)
+            new_cache = {
+                "ckv": shard(_pad_seq(ckv, cache_len),
+                             "batch", "seq_shard", None),
+                "krope": shard(_pad_seq(k_rope, cache_len),
+                               "batch", "seq_shard", None),
+            }
+        else:
+            out = full_attention(q, k, vfull, scale=scale)
+            new_cache = None
+
+    out = jnp.einsum("bshk,hkd->bsd", out,
+                     p["wo"].astype(dt).reshape(h, dv, x.shape[-1]))
+    return shard(out, "batch", "seq", "embed"), new_cache

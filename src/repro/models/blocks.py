@@ -1,0 +1,62 @@
+"""Residual block = mixer (attention or SSD) + MLP (dense / MoE / none)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from .layers import mlp_dense, rms_norm
+from .moe import moe_mlp, moe_mlp_ragged, moe_param_shapes
+from .ssm import ssm_apply, ssm_cache_shapes, ssm_param_shapes
+
+
+def _mixer(spec):
+    if spec.kind == "ssm":
+        return ssm_param_shapes, ssm_cache_shapes, ssm_apply
+    if spec.attn == "mla":
+        return (attn_mod.mla_param_shapes, attn_mod.mla_cache_shapes,
+                attn_mod.mla_apply)
+    return (attn_mod.gqa_param_shapes, attn_mod.gqa_cache_shapes,
+            attn_mod.gqa_apply)
+
+
+def dense_mlp_shapes(cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "ln": ((d,), (None,), "ones"),
+        "w_gate": ((d, f), ("fsdp", "tp"), "normal"),
+        "w_up": ((d, f), ("fsdp", "tp"), "normal"),
+        "w_down": ((f, d), ("tp", "fsdp"), "normal"),
+    }
+
+
+def block_param_shapes(cfg, spec):
+    shapes_fn, _, _ = _mixer(spec)
+    out = {"mixer": shapes_fn(cfg)}
+    if spec.mlp == "dense":
+        out["mlp"] = dense_mlp_shapes(cfg)
+    elif spec.mlp == "moe":
+        out["mlp"] = moe_param_shapes(cfg)
+    return out
+
+
+def block_cache_shapes(cfg, spec, batch, seq):
+    _, cache_fn, _ = _mixer(spec)
+    return cache_fn(cfg, spec, batch, seq)
+
+
+def block_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None):
+    """Returns (x, new_cache, aux_loss)."""
+    _, _, apply_fn = _mixer(spec)
+    out, new_cache = apply_fn(x, p["mixer"], cfg, spec, mode=mode, pos=pos,
+                              cache=cache, cache_len=cache_len)
+    x = x + out
+    aux = jnp.zeros((), jnp.float32)
+    if spec.mlp != "none":
+        xn = rms_norm(x, p["mlp"]["ln"], cfg.norm_eps)
+        if spec.mlp == "dense":
+            y = mlp_dense(xn, p["mlp"], cfg)
+        else:
+            fn = moe_mlp_ragged if cfg.moe_impl == "ragged" else moe_mlp
+            y, aux = fn(xn, p["mlp"], cfg)
+        x = x + y
+    return x, new_cache, aux

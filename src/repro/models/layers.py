@@ -1,0 +1,102 @@
+"""Shared layers: norms, rope, MLPs, embeddings, losses (pure JAX)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sharding import shard
+
+
+def rms_norm(x, w, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def gated_rms_norm(x, z, w, eps=1e-5):
+    """Mamba2-style norm: rmsnorm(x * silu(z))."""
+    return rms_norm(x * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                    w, eps)
+
+
+# ----------------------------------------------------------------- positions
+def rope_freqs(dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, dim, 2, dtype=np.float32) / dim))
+
+
+def apply_rope(x, pos, theta=10_000.0):
+    """x: (..., S, H, Dh) or (..., S, Dh); pos: (S,) or scalar broadcast."""
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(dh, theta))           # (dh/2,)
+    angles = jnp.asarray(pos, jnp.float32)[..., None] * freqs  # (S, dh/2)
+    if x.ndim == angles.ndim + 2:                        # heads dim present
+        angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(pos, dim: int):
+    """(S,) -> (S, dim) classic transformer sinusoidal embedding."""
+    half = dim // 2
+    freqs = jnp.exp(-np.log(10_000.0) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    ang = jnp.asarray(pos, jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ----------------------------------------------------------------------- MLP
+def mlp_dense(x, p, cfg):
+    """SwiGLU MLP. x: (B, S, D)."""
+    del cfg
+    dt = x.dtype
+    h = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+    h = shard(jax.nn.silu(h) * u, "batch", "seq", "ff_act")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(dt))
+
+
+def embed_tokens(tokens, p_embed, cfg, dtype):
+    """tokens: (B, S) int32 or (B, S, K) for audio codebooks."""
+    dt = jnp.dtype(dtype)
+    if cfg.frontend == "audio_codebooks":
+        # sum of K codebook embeddings (MusicGen-style)
+        emb = p_embed["tok"].astype(dt)                  # (K, V, D)
+        out = 0.0
+        for k in range(cfg.n_codebooks):
+            out = out + jnp.take(emb[k], tokens[..., k], axis=0)
+        return out
+    emb = p_embed["tok"].astype(dt)                      # (V, D)
+    return jnp.take(emb, tokens, axis=0)
+
+
+def lm_logits(x, params, cfg):
+    """x: (B, S, D) -> logits.  Audio: (B, S, K, V); else (B, S, V)."""
+    dt = x.dtype
+    if cfg.frontend == "audio_codebooks":
+        w = params["lm_head"].astype(dt)                 # (K, D, V)
+        return jnp.einsum("bsd,kdv->bskv", x, w)
+    if cfg.tie_embeddings:
+        w = params["embed"]["tok"].astype(dt).T          # (D, V)
+    else:
+        w = params["lm_head"].astype(dt)                 # (D, V)
+    return shard(jnp.einsum("bsd,dv->bsv", x, w), "batch", "seq", "vocab")
+
+
+def softmax_xent(logits, labels, z_loss=0.0):
+    """Stable CE in f32 over (possibly sharded) vocab; labels: int32 ids.
+
+    Returns per-token loss with the z-loss regulariser folded in.
+    """
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + jnp.squeeze(m, -1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - gold
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    return loss

@@ -1,0 +1,175 @@
+"""Mamba2 (SSD — state-space duality) mixer, chunked algorithm.
+
+Train/prefill run the chunked SSD form: within-chunk "attention-like" term +
+an inter-chunk state recurrence (lax.scan over chunks, O(S/Q) steps).
+Decode is the O(1) recurrent update.  The per-chunk core is mirrored by the
+Pallas kernel in ``repro/kernels/ssd_chunk`` (ref.py == this math).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .layers import gated_rms_norm, rms_norm
+
+
+def conv_dim(cfg) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+
+
+def ssm_param_shapes(cfg):
+    d, di, h = cfg.d_model, cfg.d_inner, cfg.ssm_nheads
+    cd = conv_dim(cfg)
+    return {
+        "ln": ((d,), (None,), "ones"),
+        "wz": ((d, di), ("fsdp", "tp"), "normal"),
+        "wxBC": ((d, cd), ("fsdp", "tp"), "normal"),
+        "wdt": ((d, h), ("fsdp", None), "normal"),
+        "dt_bias": ((h,), (None,), "dt_bias"),
+        "A_log": ((h,), (None,), "A_log"),
+        "Dskip": ((h,), (None,), "ones"),
+        "conv_w": ((cfg.ssm_conv, cd), (None, "conv_dim"), "normal"),
+        "conv_b": ((cd,), ("conv_dim",), "zeros"),
+        "norm_w": ((di,), (None,), "ones"),
+        "out_proj": ((di, d), ("tp", "fsdp"), "normal"),
+    }
+
+
+def ssm_cache_shapes(cfg, spec, batch, seq):
+    del spec, seq
+    h, p, n = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    return {
+        "conv": ((batch, cfg.ssm_conv - 1, conv_dim(cfg)),
+                 ("batch", None, "conv_dim")),
+        "state": ((batch, h, p, n), ("batch", "ssm_heads", None, None)),
+    }
+
+
+def _causal_conv(xbc, w, bias):
+    """Depthwise causal conv via shifted adds. xbc: (B,S,C), w: (W,C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = 0.0
+    for i in range(width):
+        sl = jax.lax.dynamic_slice_in_dim(pad, i, xbc.shape[1], axis=1)
+        out = out + sl * w[i]
+    return jax.nn.silu(out + bias)
+
+
+def ssd_chunked(xs, dt, a_coef, b_in, c_in, chunk, init_state):
+    """Chunked SSD scan.
+
+    xs: (B,S,H,P) values; dt: (B,S,H) f32 step sizes; a_coef: (H,) negative;
+    b_in/c_in: (B,S,H,N).  Returns (y: (B,S,H,P), final_state: (B,H,P,N)).
+    """
+    b, s, h, p = xs.shape
+    nc = max(1, s // chunk)
+    q = s // nc
+    assert nc * q == s, (s, chunk)
+
+    def r(t):
+        return t.reshape(b, nc, q, *t.shape[2:])
+
+    xs, dt, b_in, c_in = map(r, (xs, dt, b_in, c_in))
+    xdt = xs * dt[..., None].astype(xs.dtype)              # (B,nc,Q,H,P)
+    a = (dt * a_coef).astype(jnp.float32)                  # (B,nc,Q,H) <= 0
+    cum = jnp.cumsum(a, axis=2)                            # inclusive
+    cum_t = cum.transpose(0, 1, 3, 2)                      # (B,nc,H,Q)
+
+    # within-chunk (diag) term
+    diff = cum_t[..., :, None] - cum_t[..., None, :]       # (B,nc,H,Q,Q)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(mask, jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcihn,bcjhn->bchij", c_in, b_in).astype(jnp.float32)
+    m = (cb * decay).astype(xs.dtype)
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", m, xdt)
+
+    # per-chunk input->state and chunk decay
+    last = cum_t[..., -1:]                                 # (B,nc,H,1)
+    seg = jnp.exp(last - cum_t)                            # (B,nc,H,Q)
+    bw = b_in * seg.transpose(0, 1, 3, 2)[..., None].astype(b_in.dtype)
+    s_c = jnp.einsum("bcjhn,bcjhp->bchpn", bw, xdt)        # (B,nc,H,P,N)
+    cdecay = jnp.exp(last[..., 0])                         # (B,nc,H)
+
+    # inter-chunk recurrence (carry = state entering the chunk)
+    def body(hprev, inp):
+        s_cc, cd = inp
+        hnew = hprev * cd[..., None, None].astype(hprev.dtype) + s_cc
+        return hnew, hprev
+
+    s_cs = s_c.transpose(1, 0, 2, 3, 4)                    # (nc,B,H,P,N)
+    cds = cdecay.transpose(1, 0, 2)                        # (nc,B,H)
+    h_final, h_prevs = jax.lax.scan(body, init_state, (s_cs, cds))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)             # (B,nc,H,P,N)
+
+    # cross-chunk (off-diag) term
+    y_off = jnp.einsum("bcihn,bchpn->bcihp", c_in,
+                       h_prevs.astype(c_in.dtype))
+    y_off = y_off * jnp.exp(cum)[..., None].astype(y_off.dtype)
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, h_final
+
+
+def ssm_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None):
+    """Mamba2 block mixer. x: (B,S,D) -> (out, new_cache or None)."""
+    del pos, cache_len
+    b, s, _ = x.shape
+    h, pd, n, g = (cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state,
+                   cfg.ssm_ngroups)
+    di, cw = cfg.d_inner, cfg.ssm_conv
+    dt_ = x.dtype
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+
+    z = jnp.einsum("bsd,dk->bsk", xn, p["wz"].astype(dt_))
+    xbc = jnp.einsum("bsd,dk->bsk", xn, p["wxBC"].astype(dt_))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", xn, p["wdt"].astype(dt_))
+        .astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a_coef = -jnp.exp(p["A_log"].astype(jnp.float32))      # (H,)
+
+    new_cache = None
+    if mode == "decode":
+        win = jnp.concatenate([cache["conv"].astype(dt_), xbc], axis=1)
+        conv = jax.nn.silu(
+            jnp.einsum("bwc,wc->bc", win, p["conv_w"].astype(dt_))
+            + p["conv_b"].astype(dt_))[:, None, :]          # (B,1,C)
+        new_conv = win[:, 1:]
+    else:
+        conv = _causal_conv(xbc, p["conv_w"].astype(dt_),
+                            p["conv_b"].astype(dt_))
+        new_conv = xbc[:, -(cw - 1):] if s >= cw - 1 else None
+
+    xs = conv[..., :di].reshape(b, s, h, pd)
+    xs = shard(xs, "batch", "seq", "ssm_heads", None)
+    bc = conv[..., di:].reshape(b, s, 2, g, n)
+    rep = h // g
+    b_in = jnp.broadcast_to(bc[:, :, 0, :, None], (b, s, g, rep, n)
+                            ).reshape(b, s, h, n)
+    c_in = jnp.broadcast_to(bc[:, :, 1, :, None], (b, s, g, rep, n)
+                            ).reshape(b, s, h, n)
+
+    if mode == "decode":
+        hst = cache["state"]                               # (B,H,P,N)
+        da = jnp.exp(dt[:, 0] * a_coef)                    # (B,H)
+        upd = jnp.einsum("bhn,bhp->bhpn", b_in[:, 0],
+                         (xs[:, 0] * dt[:, 0, :, None].astype(dt_)))
+        hst = hst * da[:, :, None, None].astype(hst.dtype) + upd
+        hst = shard(hst, "batch", "ssm_heads", None, None)
+        y = jnp.einsum("bhn,bhpn->bhp", c_in[:, 0], hst)[:, None]
+        new_cache = {"conv": new_conv, "state": hst}
+    else:
+        init = jnp.zeros((b, h, pd, n), dt_)
+        y, h_final = ssd_chunked(xs, dt, a_coef, b_in, c_in,
+                                 cfg.ssm_chunk, init)
+        if mode == "prefill":
+            new_cache = {
+                "conv": shard(new_conv, "batch", None, "conv_dim"),
+                "state": shard(h_final, "batch", "ssm_heads", None, None),
+            }
+
+    y = y + xs * p["Dskip"].astype(dt_)[:, None]
+    y = y.reshape(b, s, di)
+    y = gated_rms_norm(y, z, p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(dt_))
+    return shard(out, "batch", "seq", "embed"), new_cache

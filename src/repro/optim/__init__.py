@@ -1,0 +1,5 @@
+from .adamw import adamw_init, adamw_update, OptHParams, lr_schedule
+from .compress import compress_grads, decompress_grads, ef_init
+
+__all__ = ["adamw_init", "adamw_update", "OptHParams", "lr_schedule",
+           "compress_grads", "decompress_grads", "ef_init"]

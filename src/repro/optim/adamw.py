@@ -1,0 +1,81 @@
+"""AdamW with decoupled weight decay, global-norm clipping and a
+warmup+cosine schedule.  Optimizer state inherits the parameters' 2-D
+(FSDP x TP) sharding, i.e. ZeRO-style partitioning for free.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptHParams(NamedTuple):
+    lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    min_lr_frac: float = 0.1
+
+
+def lr_schedule(step, hp: OptHParams):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") \
+        else jnp.float32(step)
+    warm = hp.lr * (step + 1) / max(hp.warmup, 1)
+    t = jnp.clip((step - hp.warmup) / max(hp.total_steps - hp.warmup, 1),
+                 0.0, 1.0)
+    cos = hp.lr * (hp.min_lr_frac + (1 - hp.min_lr_frac) * 0.5 *
+                   (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < hp.warmup, warm, cos)
+
+
+def adamw_init(params, opt_dtype="float32"):
+    dt = jnp.dtype(opt_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)  # noqa: E731
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params)}
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(grads, opt_state, params, step, hp: OptHParams):
+    """Returns (new_params, new_opt_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, hp.clip_norm / (gnorm + 1e-9))
+    lr = lr_schedule(step, hp)
+    b1, b2 = hp.b1, hp.b2
+    sf = (step + 1).astype(jnp.float32)
+    bc1 = 1 - b1 ** sf
+    bc2 = 1 - b2 ** sf
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+        m32 = b1 * m32 + (1 - b1) * g
+        v32 = b2 * v32 + (1 - b2) * jnp.square(g)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + hp.eps)
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (delta + hp.weight_decay * p32)
+        return p32.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"m": new_m, "v": new_v}, metrics

@@ -1,0 +1,43 @@
+"""int8 gradient compression with error feedback (beyond-paper distributed
+optimisation knob for the DP all-reduce).
+
+The compressor quantises each gradient leaf to int8 with a per-leaf f32
+scale; the residual (quantisation error) is carried in an error-feedback
+buffer and added back the next step, so the compressed SGD direction is
+unbiased over time (Karimireddy et al., 2019 style).  On a real pod the
+int8 payload is what crosses ICI (4x fewer bytes than bf16); here the
+transform is exercised numerically end-to-end in tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quant_leaf(g):
+    amax = jnp.max(jnp.abs(g)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_grads(grads, ef):
+    """Returns (quantised_tree, scales_tree, new_ef)."""
+    corrected = jax.tree.map(
+        lambda g, e: g.astype(jnp.float32) + e, grads, ef)
+    qs = jax.tree.map(_quant_leaf, corrected)
+    q = jax.tree.map(lambda t: t[0], qs,
+                     is_leaf=lambda x: isinstance(x, tuple))
+    scales = jax.tree.map(lambda t: t[1], qs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    deq = jax.tree.map(lambda qq, s: qq.astype(jnp.float32) * s, q, scales)
+    new_ef = jax.tree.map(lambda c, d: c - d, corrected, deq)
+    return q, scales, new_ef
+
+
+def decompress_grads(q, scales):
+    return jax.tree.map(lambda qq, s: qq.astype(jnp.float32) * s, q, scales)

@@ -1,0 +1,119 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility handling.
+
+Tensors are annotated with *logical* axis names; rules map them onto the mesh
+axes that exist (``pod``/``data``/``model``).  A mesh axis is dropped for a
+given tensor dim when the dim is smaller than the axis (XLA would need >2x
+padding); dims merely not divisible are kept — XLA pads the last shard, and
+the waste shows up (deliberately) in the roofline's useful-FLOPs ratio.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> candidate mesh axes (in order). None -> replicated.
+LOGICAL_RULES: dict[str, tuple[str, ...]] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": (),                  # replicated in train/prefill compute
+    "seq_shard": ("model",),    # decode KV/SSM cache sequence axis
+    "embed": (),                # activation d_model
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "ff_act": ("model",),
+    "vocab": ("model",),
+    "qk_rank": (),              # MLA latent ranks
+    # weights: 2-D FSDP x TP
+    "fsdp": ("data",),          # weight d_model / fan-in axis
+    "tp": ("model",),           # weight fan-out axis (heads*dim, ff, vocab)
+    "heads_w": ("model",),      # weight head axis (kept sharded in decode)
+    "experts": (),              # experts replicated on the FSDP x TP grid
+    "stack": (),                # stacked scan (pattern-repeat) axis
+    # ssm
+    "ssm_heads": ("model",),
+    "ssm_state": (),
+    "conv_dim": ("model",),
+}
+
+
+class _Ctx(threading.local):
+    mesh: Mesh | None = None
+    rules: dict[str, tuple[str, ...]] | None = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Mesh | None, rules: dict | None = None):
+    """Activate a mesh for the model's internal sharding constraints."""
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, dict(LOGICAL_RULES, **(rules or {}))
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def current_mesh() -> Mesh | None:
+    return _CTX.mesh
+
+
+def axis_size(mesh: Mesh, names: tuple[str, ...]) -> int:
+    n = 1
+    for a in names:
+        if a in mesh.shape:
+            n *= mesh.shape[a]
+    return n
+
+
+def _resolve_dim(dim: int, logical: str | None, mesh: Mesh,
+                 rules: dict, strict: bool) -> tuple[str, ...] | None:
+    if logical is None:
+        return None
+    cands = rules.get(logical, ())
+    picked = []
+    size = 1
+    for a in cands:
+        if a not in mesh.shape:
+            continue
+        nxt = size * mesh.shape[a]
+        if strict:
+            # pjit *argument* shardings must divide evenly
+            if dim % nxt == 0:
+                picked.append(a)
+                size = nxt
+        elif dim >= nxt:         # constraints may pad (<=2x waste)
+            picked.append(a)
+            size = nxt
+    return tuple(picked) or None
+
+
+def logical_spec(shape: tuple[int, ...], logical_axes: tuple[str | None, ...],
+                 mesh: Mesh, rules: dict | None = None,
+                 strict: bool = False) -> P:
+    rules = dict(LOGICAL_RULES, **(rules or {})) if rules else LOGICAL_RULES
+    assert len(shape) == len(logical_axes), (shape, logical_axes)
+    parts = [_resolve_dim(d, la, mesh, rules, strict)
+             for d, la in zip(shape, logical_axes)]
+    return P(*parts)
+
+
+def logical_sharding(shape, logical_axes, mesh, rules=None,
+                     strict: bool = False) -> NamedSharding:
+    return NamedSharding(mesh, logical_spec(shape, logical_axes, mesh, rules,
+                                            strict))
+
+
+def shard(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+    """In-model sharding constraint; identity when no mesh ctx is active."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = logical_spec(x.shape, logical_axes, mesh, _CTX.rules,
+                        strict=False)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,108 @@
+"""Step builders: train_step (grad-accum + AdamW), prefill_step, serve_step.
+
+All steps open the sharding context themselves, so lowering them under
+``jax.jit`` with a mesh active resolves every internal constraint; with
+``mesh=None`` they run as plain single-device functions (CPU tests).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .models.lm import forward, init_params, init_cache
+from .models.layers import softmax_xent
+from .optim import OptHParams, adamw_init, adamw_update
+from .sharding import sharding_ctx
+
+DECODE_RULES = {"heads": ()}  # decode shards cache-seq, not heads
+
+
+def cast_tree(tree, dtype):
+    dt = jnp.dtype(dtype)
+    return jax.tree.map(
+        lambda x: x.astype(dt) if jnp.issubdtype(x.dtype, jnp.floating)
+        else x, tree)
+
+
+def init_train_state(cfg, key, hp: OptHParams = OptHParams()):
+    params = init_params(cfg, key)
+    return {
+        "params": params,
+        "opt": adamw_init(params, cfg.opt_dtype),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _token_loss(out, labels, cfg):
+    losses = softmax_xent(out["logits"], labels, cfg.z_loss)
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = jnp.sum(losses * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss
+
+
+def make_train_step(cfg, mesh=None, hp: OptHParams = OptHParams()):
+    """batch leaves are (accum, micro, ...) — scan over accum microbatches."""
+
+    def loss_fn(params, micro):
+        pc = cast_tree(params, cfg.dtype)
+        out = forward(pc, cfg, micro["tokens"], mode="train",
+                      patches=micro.get("patches"))
+        loss = _token_loss(out, micro["labels"], cfg)
+        total = loss + 0.01 * out["aux"] / max(cfg.n_layers, 1)
+        return total, loss
+
+    def train_step(state, batch):
+        with sharding_ctx(mesh):
+            params = state["params"]
+            grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+            def micro_step(carry, micro):
+                gsum, lsum = carry
+                (_, loss), g = grad_fn(params, micro)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + loss), ()
+
+            accum = jax.tree.leaves(batch)[0].shape[0]
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(micro_step,
+                                           (g0, jnp.zeros((), jnp.float32)),
+                                           batch)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            new_p, new_opt, metrics = adamw_update(
+                grads, state["opt"], params, state["step"], hp)
+            metrics["loss"] = lsum / accum
+            new_state = {"params": new_p, "opt": new_opt,
+                         "step": state["step"] + 1}
+            return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, mesh=None, cache_len=None):
+    def prefill_step(params, tokens, patches=None):
+        with sharding_ctx(mesh):
+            pc = cast_tree(params, cfg.dtype)
+            out = forward(pc, cfg, tokens, mode="prefill", patches=patches,
+                          cache_len=cache_len)
+            return out["cache"], out["logits"]
+
+    return prefill_step
+
+
+def make_serve_step(cfg, mesh=None):
+    """One decode step: (params, cache, tokens) -> (next_tokens, cache)."""
+
+    def serve_step(params, cache, tokens):
+        with sharding_ctx(mesh, DECODE_RULES):
+            pc = cast_tree(params, cfg.dtype)
+            out = forward(pc, cfg, tokens, mode="decode", pos=cache["pos"],
+                          cache=cache)
+            nxt = jnp.argmax(out["logits"], axis=-1).astype(jnp.int32)
+            return nxt, out["cache"]
+
+    return serve_step
+
+
+__all__ = ["init_train_state", "make_train_step", "make_prefill_step",
+           "make_serve_step", "cast_tree", "init_cache", "OptHParams"]

@@ -1,0 +1,126 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (flash_attention, flash_attention_ref, rms_norm,
+                           rms_norm_ref, ssd_scan, ssd_scan_ref)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+def _close(a, b, dtype):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), **_tol(dtype))
+
+
+# ------------------------------------------------------------------ flash
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,sq,sk,h,hkv,d", [
+    (1, 128, 128, 2, 2, 64),      # MHA square
+    (2, 256, 256, 4, 1, 64),      # MQA
+    (1, 128, 256, 8, 2, 128),     # GQA, cross lengths
+    (1, 64, 64, 2, 2, 32),        # small head_dim
+])
+def test_flash_attention_matches_ref(b, sq, sk, h, hkv, d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, sq, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, sk, hkv, d), dtype)
+    v = jax.random.normal(ks[2], (b, sk, hkv, d), dtype)
+    out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                          interpret=True)
+    want = flash_attention_ref(q, k, v, causal=True)
+    _close(out, want, dtype)
+
+
+@pytest.mark.parametrize("window", [16, 64, 100])
+def test_flash_attention_sliding_window(window):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 128, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 128, 2, 64), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window, block_q=32,
+                          block_k=32, interpret=True)
+    want = flash_attention_ref(q, k, v, causal=True, window=window)
+    _close(out, want, jnp.float32)
+
+
+def test_flash_attention_noncausal():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (2, 64, 2, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 128, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 128, 2, 64), jnp.float32)
+    out = flash_attention(q, k, v, causal=False, block_q=32, block_k=64,
+                          interpret=True)
+    want = flash_attention_ref(q, k, v, causal=False)
+    _close(out, want, jnp.float32)
+
+
+def test_flash_attention_block_shape_invariance():
+    """Output must not depend on the chosen BlockSpec tiling."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (1, 256, 2, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 256, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 256, 2, 64), jnp.float32)
+    outs = [flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                            interpret=True)
+            for bq, bk in ((32, 32), (64, 128), (256, 64))]
+    for o in outs[1:]:
+        _close(o, outs[0], jnp.float32)
+
+
+# -------------------------------------------------------------------- ssd
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (1, 128, 2, 64, 32, 32),
+    (2, 256, 4, 32, 64, 64),
+    (1, 64, 1, 16, 16, 64),       # single chunk
+])
+def test_ssd_scan_matches_ref(b, s, h, p, n, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    x = jax.random.normal(ks[0], (b, s, h, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))) * 0.1
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bmat = jax.random.normal(ks[3], (b, s, h, n), dtype) * 0.5
+    cmat = jax.random.normal(ks[0], (b, s, h, n), dtype) * 0.5
+    y, hf = ssd_scan(x, dt, a, bmat, cmat, chunk=chunk, interpret=True)
+    y_ref, hf_ref = ssd_scan_ref(x, dt, a, bmat, cmat, chunk=chunk)
+    tol = dict(rtol=4e-2, atol=4e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(hf, np.float32),
+                               np.asarray(hf_ref, np.float32), **tol)
+
+
+def test_ssd_scan_state_carries_across_chunks():
+    """Same input, different chunk sizes -> same output (the recurrence
+    must be chunk-size invariant)."""
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    b, s, h, p, n = 1, 128, 2, 32, 32
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))) * 0.1
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bmat = jax.random.normal(ks[3], (b, s, h, n), jnp.float32) * 0.5
+    cmat = jax.random.normal(ks[0], (b, s, h, n), jnp.float32) * 0.5
+    outs = [ssd_scan(x, dt, a, bmat, cmat, chunk=c, interpret=True)[0]
+            for c in (16, 32, 128)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- rmsnorm
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(128, 256), (4, 32, 512), (1, 64)])
+def test_rms_norm_matches_ref(shape, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(6), 2)
+    x = jax.random.normal(ks[0], shape, dtype)
+    w = jax.random.normal(ks[1], (shape[-1],), jnp.float32) * 0.1 + 1.0
+    out = rms_norm(x, w, interpret=True)
+    want = rms_norm_ref(x, w)
+    _close(out, want, dtype)

@@ -1,0 +1,284 @@
+"""UMT core: event-channel algebra, task graph, runtime behaviour."""
+import threading
+import time
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import EventChannel, Task, UMTRuntime, io
+from repro.core.eventchannel import umt_enable
+from repro.core.task import DependencyTracker, ReadyQueue
+
+
+# ------------------------------------------------------------ event channel
+def test_eventchannel_packing_roundtrip():
+    ch = EventChannel(0)
+    try:
+        for _ in range(3):
+            ch.write_block()
+        for _ in range(5):
+            ch.write_unblock()
+        b, u = ch.read()
+        assert (b, u) == (3, 5)
+        assert ch.read() == (0, 0)          # read drains
+    finally:
+        ch.close()
+
+
+@given(st.lists(st.sampled_from(["b", "u"]), max_size=200))
+@settings(max_examples=50, deadline=None)
+def test_eventchannel_counts_any_interleaving(ops):
+    ch = EventChannel(0)
+    try:
+        for o in ops:
+            (ch.write_block if o == "b" else ch.write_unblock)()
+        b, u = ch.read()
+        assert b == ops.count("b")
+        assert u == ops.count("u")
+    finally:
+        ch.close()
+
+
+def test_eventchannel_concurrent_writers_never_lose_events():
+    ch = EventChannel(0)
+    n, per = 8, 500
+
+    def w():
+        for _ in range(per):
+            ch.write_block()
+            ch.write_unblock()
+
+    ts = [threading.Thread(target=w) for _ in range(n)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    b, u = ch.read()
+    assert b == u == n * per
+    ch.close()
+
+
+def test_umt_enable_one_channel_per_core():
+    chans = umt_enable(7)
+    assert [c.core for c in chans] == list(range(7))
+    fds = {c.fd for c in chans}
+    assert len(fds) == 7
+    [c.close() for c in chans]
+
+
+# ------------------------------------------------------------- dependencies
+def _mk(fn=lambda: None, in_=(), out=()):
+    return Task(fn, (), {}, in_, out, None, None)
+
+
+def test_dep_reader_after_writer():
+    d = DependencyTracker()
+    w = _mk(out=("x",))
+    assert d.register(w) == 0
+    r = _mk(in_=("x",))
+    assert d.register(r) == 1
+    assert r in w.succs
+
+
+def test_dep_writer_after_readers_war():
+    d = DependencyTracker()
+    w1 = _mk(out=("x",))
+    d.register(w1)
+    r1, r2 = _mk(in_=("x",)), _mk(in_=("x",))
+    d.register(r1)
+    d.register(r2)
+    w2 = _mk(out=("x",))
+    n = d.register(w2)
+    assert n == 3  # w1 (WAW) + two readers (WAR)
+
+
+def test_dep_done_predecessors_do_not_block():
+    d = DependencyTracker()
+    w = _mk(out=("x",))
+    d.register(w)
+    w.done_ev.set()
+    r = _mk(in_=("x",))
+    assert d.register(r) == 0
+
+
+@given(st.lists(st.tuples(st.booleans(), st.integers(0, 3)), min_size=1,
+                max_size=24))
+@settings(max_examples=50, deadline=None)
+def test_dep_graph_is_acyclic_and_serialises_writes(spec):
+    """Chain of read/write tasks over 4 keys: registration order must
+    topologically order all writers of the same key."""
+    d = DependencyTracker()
+    tasks = []
+    for is_write, key in spec:
+        t = _mk(out=(key,)) if is_write else _mk(in_=(key,))
+        d.register(t)
+        tasks.append((t, is_write, key))
+    # successors must always have a larger tid (registration order) —
+    # i.e. the graph is acyclic by construction
+    for t, _, _ in tasks:
+        for s in t.succs:
+            assert s.tid > t.tid
+
+
+# ------------------------------------------------------------ runtime basic
+def test_runtime_runs_tasks_and_results():
+    with UMTRuntime(n_cores=2) as rt:
+        hs = [rt.submit(lambda i=i: i * i, name=f"t{i}") for i in range(20)]
+        assert [h.wait() for h in hs] == [i * i for i in range(20)]
+
+
+def test_runtime_dependency_order():
+    order = []
+    lock = threading.Lock()
+
+    def log(tag):
+        with lock:
+            order.append(tag)
+
+    with UMTRuntime(n_cores=4) as rt:
+        rt.submit(lambda: log("a"), out=("x",))
+        rt.submit(lambda: log("b"), in_=("x",), out=("y",))
+        rt.submit(lambda: log("c"), in_=("y",))
+        rt.wait_all()
+    assert order == ["a", "b", "c"]
+
+
+def test_runtime_exception_propagates():
+    def boom():
+        raise ValueError("boom")
+
+    with UMTRuntime(n_cores=2) as rt:
+        h = rt.submit(boom)
+        with pytest.raises(ValueError, match="boom"):
+            h.wait()
+
+
+def test_nested_tasks_and_taskwait():
+    results = []
+
+    with UMTRuntime(n_cores=2) as rt:
+        def parent():
+            hs = [rt.submit(lambda i=i: results.append(i)) for i in range(5)]
+            rt.taskwait()           # children done before parent continues
+            results.append("after")
+
+        rt.submit(parent).wait()
+    assert set(results[:5]) == set(range(5))
+    assert results[5] == "after"
+
+
+def test_baseline_mode_runs_everything_too():
+    with UMTRuntime(n_cores=2, umt=False) as rt:
+        hs = [rt.submit(lambda i=i: i + 1) for i in range(10)]
+        assert [h.wait() for h in hs] == list(range(1, 11))
+    assert rt.stats()["umt"] is False
+
+
+# ----------------------------------------------------- UMT-specific effects
+def test_umt_overlaps_blocking_io():
+    """4 tasks x 0.15s sleep on ONE core: baseline must serialise
+    (>=0.6s); UMT must overlap them (well under 0.4s)."""
+    def job():
+        io.sleep(0.15)
+
+    t0 = time.monotonic()
+    with UMTRuntime(n_cores=1, umt=False) as rt:
+        for _ in range(4):
+            rt.submit(job)
+        rt.wait_all()
+    base = time.monotonic() - t0
+
+    t0 = time.monotonic()
+    with UMTRuntime(n_cores=1, umt=True) as rt:
+        for _ in range(4):
+            rt.submit(job)
+        rt.wait_all()
+    umt = time.monotonic() - t0
+
+    assert base >= 0.55, base
+    assert umt <= 0.40, umt
+
+
+def test_umt_wakes_workers_on_blocked_core():
+    """While one task blocks, another must get CPU on the same core."""
+    ran = threading.Event()
+
+    def blocker():
+        io.sleep(0.3)
+
+    def quick():
+        ran.set()
+
+    with UMTRuntime(n_cores=1, umt=True) as rt:
+        rt.submit(blocker)
+        time.sleep(0.05)            # let blocker start blocking
+        rt.submit(quick)
+        assert ran.wait(0.2), "task did not run while core was blocked"
+        rt.wait_all()
+    s = rt.stats()
+    assert s["wakes"] >= 1
+
+
+def test_oversubscription_self_surrender():
+    """A herd of workers waking on one core must self-surrender at the
+    next scheduling point (paper Fig. 1, T4-T6)."""
+    n = 5
+    barrier = threading.Barrier(n)
+
+    def job():
+        io.call(barrier.wait)    # all block together -> leader spawns help
+        time.sleep(0.05)         # unmonitored "compute": herd overlaps ->
+        return True              # oversubscription observed at finish
+
+    with UMTRuntime(n_cores=1, umt=True) as rt:
+        hs = [rt.submit(job) for _ in range(n)]
+        assert all(h.wait() for h in hs)
+        rt.wait_all()
+        time.sleep(0.05)
+        s = rt.stats()
+    assert s["spawned"] >= n     # leader actually grew the worker set
+    assert s["surrenders"] >= 2  # the herd shed extras at finish points
+
+
+def test_ready_count_converges_when_quiescent():
+    with UMTRuntime(n_cores=2, umt=True) as rt:
+        for i in range(10):
+            rt.submit(lambda: io.sleep(0.02))
+        rt.wait_all()
+        time.sleep(0.1)
+        for c in range(rt.n_cores):
+            rt.drain_core(c)
+        # Σ ready == number of workers not parked in the pool
+        with rt._pool_lock:
+            parked = len(rt._pool)
+        runnable = len(rt._workers) - parked
+        assert sum(rt.ready_count) == runnable, (
+            rt.ready_count, runnable, len(rt._workers), parked)
+
+
+def test_migration_compensation_algebra():
+    """Paper §III-B: a *runnable* worker migrated from core A to B must
+    move one ready unit from A to B via the missed (block@A, unblock@B)."""
+    release = threading.Event()
+    started = threading.Event()
+
+    def busy():
+        started.set()
+        release.wait()          # unmonitored: worker counts as runnable
+
+    with UMTRuntime(n_cores=2, umt=True, scan_interval=0.5) as rt:
+        rt.submit(busy)
+        assert started.wait(1)
+        time.sleep(0.02)
+        for c in (0, 1):
+            rt.drain_core(c)
+        before = list(rt.ready_count)
+        w = next(x for x in rt._workers if x.current_task is not None)
+        old = w.core
+        new = 1 - old
+        w.migrate(new)
+        for c in (0, 1):
+            rt.drain_core(c)
+        after = list(rt.ready_count)
+        assert after[old] == before[old] - 1
+        assert after[new] == before[new] + 1
+        release.set()
+        rt.wait_all()

@@ -1,0 +1,82 @@
+"""UMT v2 — the paper's proposed 'notify only when the core goes idle'
+variant (§III-D / §V future work): same scheduling behaviour, far fewer
+events, overflow concern gone."""
+import threading
+import time
+
+from repro.core import UMTRuntime, io
+
+
+def _run_jobs(notify, n_jobs=6, cores=1):
+    with UMTRuntime(n_cores=cores, umt=True, notify=notify) as rt:
+        for _ in range(n_jobs):
+            rt.submit(lambda: io.sleep(0.1))
+        rt.wait_all()
+        stats = rt.stats()
+        events = sum(1 for e in rt.tracer.events
+                     if e[1] in ("block", "unblock"))
+        fired = sum(1 for e in rt.tracer.events if e[1] == "fired") \
+            if False else None
+        # count actual eventfd traffic via ready-count updates: drain all
+        for c in range(rt.n_cores):
+            rt.drain_core(c)
+    return stats, events
+
+
+def test_idle_only_still_overlaps_blocking_io():
+    t0 = time.monotonic()
+    with UMTRuntime(n_cores=1, umt=True, notify="idle_only") as rt:
+        for _ in range(4):
+            rt.submit(lambda: io.sleep(0.15))
+        rt.wait_all()
+    dt = time.monotonic() - t0
+    assert dt <= 0.40, dt          # overlapped, like notify="all"
+    assert rt.stats()["wakes"] + rt.stats()["spawned"] >= 3
+
+
+def test_idle_only_reduces_event_traffic():
+    """v2 fires only on idle/busy edges, so when several workers of one
+    core block *together* (a herd at a barrier), one event replaces N.
+    Measured as actual eventfd writes."""
+    def measure(notify):
+        n = 6
+        barrier = threading.Barrier(n)
+
+        def job():
+            io.call(barrier.wait)   # herd-block: N shim transitions
+            time.sleep(0.03)        # overlapping compute afterwards
+
+        with UMTRuntime(n_cores=1, umt=True, notify=notify) as rt:
+            hs = [rt.submit(job) for _ in range(n)]
+            [h.wait() for h in hs]
+            rt.wait_all()
+            time.sleep(0.05)
+            fired = sum(ch.writes for ch in rt.channels)
+            shim = sum(1 for e in rt.tracer.events
+                       if e[1] in ("block", "unblock"))
+        return shim, fired
+
+    shim_all, fired_all = measure("all")
+    shim_idle, fired_idle = measure("idle_only")
+    # v1 writes on every transition; v2 collapses the herd to edges
+    assert fired_all >= shim_all * 0.9
+    assert fired_idle < 0.7 * fired_all, (fired_idle, fired_all)
+
+
+def test_idle_only_self_surrender_via_kernel_count():
+    n = 5
+    barrier = threading.Barrier(n)
+
+    def job():
+        io.call(barrier.wait)
+        time.sleep(0.05)
+        return True
+
+    with UMTRuntime(n_cores=1, umt=True, notify="idle_only") as rt:
+        hs = [rt.submit(job) for _ in range(n)]
+        assert all(h.wait() for h in hs)
+        rt.wait_all()
+        time.sleep(0.05)
+        s = rt.stats()
+    assert s["spawned"] >= n
+    assert s["surrenders"] >= 2
