@@ -15,6 +15,34 @@ import os
 CSV_ROWS: list[tuple[str, float, str]] = []
 
 
+def bench_sched_fast_path(fast: bool):
+    """Scheduler microbenchmark (sharded vs pre-PR global queue)."""
+    from . import sched
+    argv = ["--cores", "1,4" if fast else "1,2,4,8", "--both"]
+    if fast:
+        argv.append("--fast")
+    rows = sched.main(argv)
+    by_key = {}
+    for r in rows:
+        CSV_ROWS.append((f"{r.name}_c{r.cores}", 1e6 / r.tasks_s,
+                         f"tasks_s={r.tasks_s:.0f};"
+                         f"submit_p50_us={r.submit_p50_us:.1f};"
+                         f"steal_rate={r.steal_rate:.3f}"))
+        by_key[(r.cores, r.umt, r.sched, r.blocking)] = r
+    for (cores, umt, sched_kind, blocking), r in sorted(by_key.items()):
+        if sched_kind != "sharded":
+            continue
+        g = by_key.get((cores, umt, "global", blocking))
+        if g is None:
+            continue
+        tag = ("umt" if umt else "base") + ("_blk" if blocking else "")
+        # value column stays in µs/task like every other row; the
+        # sharded-vs-global ratio rides in the derived field
+        CSV_ROWS.append((f"sched_sharded_vs_global_{tag}_c{cores}",
+                         1e6 / r.tasks_s,
+                         f"x_global={r.tasks_s / g.tasks_s:.2f}"))
+
+
 def bench_heat_table_iii_iv(fast: bool):
     from . import heat
     reps = 3 if fast else 5
@@ -90,8 +118,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--skip-sched", action="store_true",
+                    help="skip the scheduler microbenchmark matrix")
     args = ap.parse_args()
 
+    if not args.skip_sched:
+        bench_sched_fast_path(args.fast)
     bench_heat_table_iii_iv(args.fast)
     bench_fwi_table_i(args.fast)
     bench_overhead_table_ii(args.fast)

@@ -1,0 +1,163 @@
+"""Scheduler microbenchmark: the cost of the scheduler itself, isolated
+from any real workload (this PR's tentpole metric).
+
+Submits a burst of fine-grained 50 µs tasks and measures
+
+  * task throughput   — tasks/sec from first submit to quiescence;
+  * submit latency    — p50/p99 of a single ``rt.submit`` call;
+  * steal rate        — work-stealing steals per task (sharded only);
+
+for every combination of {baseline, UMT} x {global, sharded} x core count.
+``sched="global"`` is the pre-sharding single-FIFO scheduler kept exactly
+for this comparison; the headline number is UMT-sharded vs UMT-global at
+4 cores (target: >=3x tasks/sec).
+
+Two task bodies:
+
+  * compute (default) — an *unmonitored* 50 µs wait: stands in for a task
+    whose work releases the GIL but never blocks in the kernel (a compute
+    kernel, a spin on a device). No block/unblock events are written, so
+    the measurement isolates pure scheduler overhead: submission, dispatch,
+    wakes, steals.
+  * --blocking        — a *monitored* 50 µs sleep: every task writes the
+    paper's block/unblock eventfd pair, exercising the full UMT protocol
+    (Leader drains, oversubscription wakes, self-surrender) at a
+    granularity far below what the paper targets — the stress case.
+
+  python -m benchmarks.sched [--cores 1,2,4,8] [--tasks 3000]
+                             [--task-us 50] [--reps 3] [--blocking]
+                             [--both] [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from dataclasses import dataclass
+
+from repro.core import UMTRuntime, io
+
+
+@dataclass
+class SchedResult:
+    name: str
+    cores: int
+    umt: bool
+    sched: str
+    blocking: bool
+    tasks_s: float
+    submit_p50_us: float
+    submit_p99_us: float
+    steal_rate: float
+    wakes: int
+    surrenders: int
+    n_workers: int
+
+    def row(self) -> str:
+        return (f"{self.name},c={self.cores},tasks_s={self.tasks_s:.0f},"
+                f"submit_p50={self.submit_p50_us:.1f}us,"
+                f"submit_p99={self.submit_p99_us:.1f}us,"
+                f"steal_rate={self.steal_rate:.3f},wakes={self.wakes},"
+                f"surr={self.surrenders},workers={self.n_workers}")
+
+
+def _one_run(cores: int, umt: bool, sched: str, n_tasks: int,
+             task_us: float, blocking: bool) -> SchedResult:
+    sleep_s = task_us * 1e-6
+    lat_ns = []
+    with UMTRuntime(n_cores=cores, umt=umt, sched=sched,
+                    trace=False) as rt:
+        if blocking:
+            def tiny():
+                io.sleep(sleep_s)       # monitored: full UMT event traffic
+        else:
+            def tiny():
+                time.sleep(sleep_s)     # unmonitored: pure scheduler cost
+
+        t0 = time.perf_counter()
+        for _ in range(n_tasks):
+            s0 = time.perf_counter_ns()
+            rt.submit(tiny)
+            lat_ns.append(time.perf_counter_ns() - s0)
+        rt.wait_all()
+        dt = time.perf_counter() - t0
+        s = rt.stats()
+    lat_ns.sort()
+    name = (f"sched_{'umt' if umt else 'base'}_{sched}"
+            f"{'_blk' if blocking else ''}")
+    return SchedResult(
+        name=name, cores=cores, umt=umt, sched=sched, blocking=blocking,
+        tasks_s=n_tasks / dt,
+        submit_p50_us=lat_ns[len(lat_ns) // 2] / 1e3,
+        submit_p99_us=lat_ns[int(len(lat_ns) * 0.99)] / 1e3,
+        steal_rate=s["steals"] / n_tasks,
+        wakes=s["wakes"], surrenders=s["surrenders"],
+        n_workers=s["n_workers"])
+
+
+def bench(cores: int, umt: bool, sched: str, n_tasks: int, task_us: float,
+          reps: int, blocking: bool) -> SchedResult:
+    """Median-throughput result over ``reps`` runs."""
+    runs = [_one_run(cores, umt, sched, n_tasks, task_us, blocking)
+            for _ in range(reps)]
+    runs.sort(key=lambda r: r.tasks_s)
+    return runs[len(runs) // 2]
+
+
+def run_matrix(core_list, n_tasks, task_us, reps, blocking,
+               results, speedups):
+    for cores in core_list:
+        for umt in (False, True):
+            per_sched = {}
+            for sched in ("global", "sharded"):
+                r = bench(cores, umt, sched, n_tasks, task_us, reps,
+                          blocking)
+                per_sched[sched] = r
+                results.append(r)
+                print(r.row(), flush=True)
+            sp = per_sched["sharded"].tasks_s / per_sched["global"].tasks_s
+            speedups[(cores, umt, blocking)] = sp
+            print(f"  -> {'umt' if umt else 'base'}"
+                  f"{'/blk' if blocking else ''} c={cores}: "
+                  f"sharded/global = {sp:.2f}x", flush=True)
+
+
+def main(argv=None) -> list[SchedResult]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cores", default="1,2,4,8")
+    ap.add_argument("--tasks", type=int, default=3000)
+    ap.add_argument("--task-us", type=float, default=50.0)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--blocking", action="store_true",
+                    help="monitored (blocking) task bodies only")
+    ap.add_argument("--both", action="store_true",
+                    help="run compute AND blocking task bodies")
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args(argv)
+    try:
+        core_list = [int(c) for c in args.cores.split(",")]
+    except ValueError:
+        ap.error(f"--cores must be a comma-separated list of ints, "
+                 f"got {args.cores!r}")
+    if args.tasks < 1 or args.reps < 1:
+        ap.error("--tasks and --reps must be >= 1")
+    n_tasks, reps = args.tasks, args.reps
+    if args.fast:
+        core_list = [c for c in core_list if c <= 4] or [4]
+        n_tasks = min(n_tasks, 1500)
+        reps = min(reps, 2)
+
+    results: list[SchedResult] = []
+    speedups: dict[tuple[int, bool, bool], float] = {}
+    modes = ((True,) if args.blocking else
+             (False, True) if args.both else (False,))
+    for blocking in modes:
+        run_matrix(core_list, n_tasks, args.task_us, reps, blocking,
+                   results, speedups)
+    for (cores, umt, blocking), sp in sorted(speedups.items()):
+        tag = ("umt" if umt else "base") + ("_blk" if blocking else "")
+        print(f"SPEEDUP,{tag},c={cores},{sp:.2f}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

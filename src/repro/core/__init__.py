@@ -8,11 +8,12 @@ DESIGN.md §1-2 and the fidelity ledger in §6.
 from .eventchannel import EventChannel, umt_enable
 from .monitor import current_worker, io, umt_blocking, umt_thread_ctrl
 from .runtime import Leader, UMTRuntime, Worker
-from .task import DependencyTracker, ReadyQueue, Task
+from .task import (AtomicCounter, DependencyTracker, ReadyQueue,
+                   ShardedReadyQueue, Task)
 from .tracing import Tracer
 
 __all__ = [
     "EventChannel", "umt_enable", "current_worker", "io", "umt_blocking",
-    "umt_thread_ctrl", "Leader", "UMTRuntime", "Worker",
-    "DependencyTracker", "ReadyQueue", "Task", "Tracer",
+    "umt_thread_ctrl", "Leader", "UMTRuntime", "Worker", "AtomicCounter",
+    "DependencyTracker", "ReadyQueue", "ShardedReadyQueue", "Task", "Tracer",
 ]

@@ -118,6 +118,9 @@ class io:
 
     @staticmethod
     def acquire(sem, timeout=None):
+        # NOTE: the runtime's park() does NOT use this — parking needs
+        # its block event pinned to the park-entry core (see
+        # UMTRuntime.park), so it brackets the semaphore manually.
         with umt_blocking():
             return sem.acquire(timeout=timeout)
 

@@ -17,6 +17,27 @@ Flow (paper Fig. 1):
 
 ``umt=False`` gives the baseline Nanos6 model: same task graph, one worker
 per core, no event channel — a blocked worker leaves its core idle.
+
+Sharded scheduler fast path (``sched="sharded"``, the default)
+--------------------------------------------------------------
+The ready queue is sharded per core (``ShardedReadyQueue``): producers
+push to their own core's deque, consumers pop their local deque FIFO and
+steal the oldest task from a neighbour only when local is dry — the
+user-space analogue of scx/sched_ext per-CPU dispatch queues with a
+load-balancing hook.  Everything the hot path touches is per-core: each
+shard has its own lock, the per-core ready counters have per-core locks,
+and ``len(ready)`` reads an approximate lock-free ``AtomicCounter``.
+``push_ready`` is O(1): it drains and idle-checks only the *target*
+core's channel instead of scanning every core per submission.
+
+Fidelity note (paper §III): the paper's Nanos6 scheduler is one global
+FIFO; its per-core state is only the block/unblock *counters*.  Sharding
+the queue preserves the observable contract — per-core FIFO order, work
+conservation via stealing plus the Leader's epoll/1 ms-rescan global
+fallback (which remains the authority for waking idle-pool workers onto
+idle cores) — while removing the global lock and the O(n_cores) eventfd
+drains from every submission.  ``sched="global"`` keeps the paper-shaped
+single queue for comparison (benchmarks/sched.py measures both).
 """
 from __future__ import annotations
 
@@ -26,16 +47,19 @@ import threading
 
 from .eventchannel import umt_enable
 from .monitor import current_worker, io, umt_thread_ctrl
-from .task import DependencyTracker, ReadyQueue, Task
+from .task import (AtomicCounter, DependencyTracker, ReadyQueue,
+                   ShardedReadyQueue, Task)
 from .tracing import Tracer
 
 
 class Worker(threading.Thread):
-    _next_id = 0
+    # worker ids are allocated from both the main thread (runtime init,
+    # submit-time growth) and the Leader thread (leader_scan) — an
+    # AtomicCounter makes the id handout race-free
+    _ids = AtomicCounter()
 
     def __init__(self, rt: "UMTRuntime", core: int):
-        Worker._next_id += 1
-        self.wid = Worker._next_id
+        self.wid = Worker._ids.add(1)
         super().__init__(name=f"umt-worker-{self.wid}", daemon=True)
         self.rt = rt
         self.core = core
@@ -89,14 +113,14 @@ class Worker(threading.Thread):
             self.unblock_channel().write_unblock()  # became runnable here
         rt.tracer.ev("spawn", self.wid, self.core)
         while rt.running:
-            task = rt.ready.pop()
+            task = rt.next_task(self)
             if task is None:
                 if not rt.park(self):
                     break
                 continue
             # scheduling point: task start
             if rt.sched_point(self):
-                rt.ready.push_front(task)
+                rt.requeue_front(task, self.core)
                 if not rt.park(self, force=True):
                     break
                 continue
@@ -155,33 +179,44 @@ class UMTRuntime:
     v2: the (shim's) kernel side keeps a per-core running count and only
     writes an event on the 1->0 (core idle) and 0->1 (core busy again)
     transitions, cutting event traffic and making counter overflow moot.
+
+    sched: "sharded" — per-core ready deques + work stealing (the fast
+    path, see module docstring); "global" — the single global FIFO the
+    paper's Nanos6 uses (kept for comparison benchmarks).
     """
 
     def __init__(self, n_cores: int | None = None, umt: bool = True,
                  max_workers_per_core: int = 8, scan_interval: float = 0.001,
-                 trace: bool = True, notify: str = "all"):
+                 trace: bool = True, notify: str = "all",
+                 sched: str = "sharded"):
         assert notify in ("all", "idle_only")
+        assert sched in ("sharded", "global")
         self.n_cores = n_cores or os.cpu_count() or 1
         self.umt = umt
         self.notify = notify
-        # "kernel-side" per-core runnable counts for idle_only mode
-        self._krun = [0] * (n_cores or os.cpu_count() or 1)
-        self._krun_lock = threading.Lock()
+        self.sched = sched
+        self.sharded = sched == "sharded"
+        # "kernel-side" per-core runnable counts for idle_only mode;
+        # per-core locks — one core's transitions never contend another's
+        self._krun = [0] * self.n_cores
+        self._krun_locks = [threading.Lock() for _ in range(self.n_cores)]
         self.scan_interval = scan_interval
         self.max_workers = max_workers_per_core * self.n_cores
         self.running = True
         self.tracer = Tracer(trace)
-        self.ready = ReadyQueue()
+        self.ready = (ShardedReadyQueue(self.n_cores) if self.sharded
+                      else ReadyQueue())
         self.deps = DependencyTracker()
         self.channels = umt_enable(self.n_cores)
         self.ready_count = [0] * self.n_cores     # user-space per-core count
-        self._count_lock = threading.Lock()
+        self._count_locks = [threading.Lock() for _ in range(self.n_cores)]
         self._pool: list[Worker] = []
         self._pool_lock = threading.Lock()
         self._workers: list[Worker] = []
         self._outstanding = 0
-        self._quiet = threading.Event()
-        self._quiet.set()
+        self._quiet_lock = threading.Lock()       # outstanding/quiet only —
+        self._quiet = threading.Event()           # never shared with the
+        self._quiet.set()                         # per-core counter paths
         self._wake_r, self._wake_w = os.pipe2(os.O_NONBLOCK)
         self.stats_extra = {"wakes": 0, "surrenders": 0, "spawned": 0}
 
@@ -199,6 +234,8 @@ class UMTRuntime:
         self.shutdown()
 
     def shutdown(self):
+        if not self.running:        # idempotent: fds are closed below
+            return
         self.wait_all()
         self.running = False
         with self._pool_lock:
@@ -234,7 +271,7 @@ class UMTRuntime:
         parent = parent_w.current_task if isinstance(parent_w, Worker) and \
             parent_w.rt is self else None
         t = Task(fn, args, kwargs, in_, out, name, parent)
-        with self._count_lock:
+        with self._quiet_lock:
             self._outstanding += 1
             self._quiet.clear()
         if parent is not None:
@@ -248,7 +285,7 @@ class UMTRuntime:
         # mid-task is not possible at user level — see DESIGN fidelity
         # ledger — the start/finish points carry the surrender action).
         if parent is not None and self.umt:
-            self.drain_core(parent_w.core)
+            self.drain_core(parent_w.core, lazy=self.sharded)
         return t
 
     def task(self, fn=None, **opts):
@@ -260,7 +297,41 @@ class UMTRuntime:
             return submitter
         return deco(fn) if fn is not None else deco
 
-    def push_ready(self, t: Task):
+    def push_ready(self, t: Task, needs_consumer: bool = False):
+        if not self.sharded:
+            self._push_ready_global(t)
+            return
+        w = current_worker()
+        if isinstance(w, Worker) and w.rt is self:
+            core = w.core                       # cache affinity
+            # a worker fanning out mid-task won't pop again until the
+            # parent task ends — these pushes need their own consumer
+            needs_consumer |= w.current_task is not None
+        else:
+            core = self.ready.select_shard()
+        self.ready.push(t, core)
+        if not self.umt:
+            self._wake_for_work(core)
+            return
+        # O(1) fast path: drain + idle-check only the *target* core, and
+        # only if its channel is dirty.  Target core idle -> targeted
+        # wake.  Target core busy -> usually someone visits this shard
+        # soon (a completing worker pops next; main-thread round-robin
+        # spreads over all shards), EXCEPT when the pusher is known not
+        # to come back for this task (mid-task fan-out, completion
+        # fan-out beyond the first successor): parked workers can't
+        # steal on their own, so hand the task to any pool worker (it
+        # will steal it).  All reads are racy/approximate — the Leader's
+        # epoll/1 ms rescan (paper §III) stays the global fallback.
+        self.drain_core(core, lazy=True)
+        if self.ready_count[core] <= 0:       # racy read: approximate
+            self._wake_for_work(core)
+        elif needs_consumer and self._pool:   # racy read: approximate
+            self._wake_for_work()
+
+    def _push_ready_global(self, t: Task):
+        """Pre-sharding push path (sched="global"): global FIFO + full
+        drain of every core per submission — kept for benchmarks."""
         self.ready.push(t)
         # Baseline has no leader: always self-wake.  In UMT mode the Leader
         # is the waker; waking on *every* push causes park/wake churn when
@@ -272,17 +343,52 @@ class UMTRuntime:
         else:
             for c in range(self.n_cores):
                 self.drain_core(c)
-            with self._count_lock:
-                idle = any(rc <= 0 for rc in self.ready_count)
+            idle = any(rc <= 0 for rc in self.ready_count)
             if idle:
                 self._wake_for_work()
 
-    def _wake_for_work(self):
+    def _wake_for_work(self, core: int | None = None) -> bool:
+        """Wake (at most) one idle-pool worker; prefer one already bound
+        to ``core`` (cache affinity), re-target another otherwise.
+        Returns False when the pool was empty."""
+        w = None
         with self._pool_lock:
-            w = self._pool.pop() if self._pool else None
-        if w is not None:
-            self.stats_extra["wakes"] += 1
-            w.sem.release()
+            if core is not None:
+                for i, cand in enumerate(self._pool):
+                    if cand.core == core:
+                        w = self._pool.pop(i)
+                        break
+            if w is None and self._pool:
+                w = self._pool.pop()
+        if w is None:
+            return False
+        if core is not None and w.core != core:
+            w.retarget(core)     # parked == blocked: no compensation pair
+        self.stats_extra["wakes"] += 1
+        w.sem.release()
+        return True
+
+    # ------------------------------------------------------------ dispatch
+    def next_task(self, w: Worker):
+        """Worker dispatch: local shard FIFO, then steal, (global mode:
+        single queue pop)."""
+        if not self.sharded:
+            return self.ready.pop()
+        t = self.ready.pop_local(w.core)
+        if t is not None:
+            return t
+        t, victim = self.ready.steal(w.core)
+        if t is not None:
+            self.tracer.ev("steal", w.wid, w.core, victim)
+        return t
+
+    def requeue_front(self, task: Task, core: int):
+        """Put a claimed-but-not-started task back at the head (surrender
+        path) so per-core FIFO order is preserved."""
+        if self.sharded:
+            self.ready.push_front(task, core)
+        else:
+            self.ready.push_front(task)
 
     # ------------------------------------------------------------ execution
     def run_task(self, w: Worker, t: Task):
@@ -312,9 +418,11 @@ class UMTRuntime:
                 p.children_left -= 1
                 if p.children_left == 0:
                     p.child_done_ev.set()
-        for s in newly_ready:
-            self.push_ready(s)
-        with self._count_lock:
+        for i, s in enumerate(newly_ready):
+            # the completing worker pops exactly one task next — further
+            # successors need their own consumer woken
+            self.push_ready(s, needs_consumer=i > 0)
+        with self._quiet_lock:
             self._outstanding -= 1
             if self._outstanding == 0:
                 self._quiet.set()
@@ -335,7 +443,7 @@ class UMTRuntime:
         kernel-side running count."""
         if self.notify != "idle_only":
             return self.channels[core]
-        with self._krun_lock:
+        with self._krun_locks[core]:
             self._krun[core] -= 1
             fire = self._krun[core] <= 0
         return self.channels[core] if fire else self._NULL
@@ -344,44 +452,45 @@ class UMTRuntime:
         """idle_only: fire only on 0 -> 1 (core busy again)."""
         if self.notify != "idle_only":
             return self.channels[core]
-        with self._krun_lock:
+        with self._krun_locks[core]:
             was_idle = self._krun[core] <= 0
             self._krun[core] += 1
         return self.channels[core] if was_idle else self._NULL
 
-    def drain_core(self, core: int):
-        blocked, unblocked = self.channels[core].read()
+    def drain_core(self, core: int, lazy: bool = False):
+        """Fold one core's pending (blocked, unblocked) events into its
+        ready count.  ``lazy=True`` (sharded hot paths) skips the
+        eventfd_read syscall when the channel's dirty flag says nothing
+        was written since the last drain — exact, not approximate: the
+        counter only moves when events are written.  The global mode
+        always force-drains (pre-PR behaviour, kept for benchmarks), as
+        does the Leader's epoll path (a level-triggered epoll on an
+        undrained fd must actually drain it or it would spin)."""
+        ch = self.channels[core]
+        blocked, unblocked = ch.read_if_dirty() if lazy else ch.read()
         if blocked or unblocked:
-            with self._count_lock:
+            with self._count_locks[core]:
                 self.ready_count[core] += unblocked - blocked
 
     def leader_scan(self):
-        """Wake an idle worker onto every idle core that has pending work."""
+        """Wake an idle worker onto every idle core that has pending work.
+
+        ``len(self.ready)`` is the sharded queue's approximate lock-free
+        counter — the scan never takes a queue lock; a stale read is
+        corrected by the next rescan (<= 50 ms away)."""
         if len(self.ready) == 0:
             return
         for core in range(self.n_cores):
             if len(self.ready) == 0:
                 break
-            with self._count_lock:
+            with self._count_locks[core]:
                 idle = self.ready_count[core] <= 0
             if not idle:
                 continue
-            w = None
-            with self._pool_lock:
-                # prefer a worker already bound to this core (cache affinity)
-                for i, cand in enumerate(self._pool):
-                    if cand.core == core:
-                        w = self._pool.pop(i)
-                        break
-                if w is None and self._pool:
-                    w = self._pool.pop()
-            if w is None:
+            if not self._wake_for_work(core):
+                # pool dry: grow the worker set instead (paper Fig. 1 T3)
                 if len(self._workers) < self.max_workers:
                     self._spawn(core)
-                continue
-            w.retarget(core)     # blocked: unblock lands on the new core
-            self.stats_extra["wakes"] += 1
-            w.sem.release()
 
     def sched_point(self, w: Worker) -> bool:
         """Paper §III-C: drain own-core counters; surrender if >1 ready.
@@ -391,14 +500,14 @@ class UMTRuntime:
         if self.notify == "idle_only":
             # v2 kernel exposes the per-core ready count read-only; the
             # eventfd only carries idle/busy edges.
-            with self._krun_lock:
+            with self._krun_locks[w.core]:
                 over = self._krun[w.core] > 1
             if over:
                 self.stats_extra["surrenders"] += 1
                 self.tracer.ev("surrender", w.wid, w.core)
             return over
-        self.drain_core(w.core)
-        with self._count_lock:
+        self.drain_core(w.core, lazy=self.sharded)
+        with self._count_locks[w.core]:
             over = self.ready_count[w.core] > 1
         if over:
             self.stats_extra["surrenders"] += 1
@@ -417,19 +526,47 @@ class UMTRuntime:
 
         ``force=True`` (self-surrender) skips the lost-wakeup recheck —
         the worker *wants* to leave the core even though work is pending.
+
+        Manual event bracketing (not ``io.acquire``): the block event is
+        pinned to the *park-entry* core.  A waker pops us from the pool
+        and may retarget ``w.core`` before we write the block; pinning
+        guarantees the (block@entry, unblock@wake) pair still brackets
+        the migration instead of collapsing onto the new core and
+        leaving a phantom ready count on the old one.  The no-event fast
+        path (token already available) is only taken when we were not
+        retargeted — a zero-length block on the *same* core is
+        unobservable, a migrated one is not.
         """
         if not self.running:
             return False
+        entry_core = w.core
         with self._pool_lock:
             self._pool.append(w)
         if not force and len(self.ready) > 0:
             # lost-wakeup guard: work arrived between pop() and park
             with self._pool_lock:
                 if w in self._pool:
+                    # still ours to remove -> nobody popped/retargeted us
                     self._pool.remove(w)
                     return self.running     # loop around and re-pop
-            # someone woke us already: fall through and eat the token
-        io.acquire(w.sem)          # ← monitored block; migration-aware wake
+            # someone woke us already: eat the token below
+        got = w.sem.acquire(blocking=False)
+        if got and w.core == entry_core:
+            # fast path: never actually blocked, never moved — no events
+            # owed (and w is already out of the pool, so no later
+            # retarget can invalidate the check)
+            return self.running
+        if w.monitored:
+            self._ch_block(entry_core).write_block()
+        # tracing is mode-independent (honest baseline CPU% needs idle
+        # visibility); pinned to entry core like the kernel-side event
+        self.tracer.ev("block", w.wid, entry_core)
+        if not got:
+            w.sem.acquire()        # ← the actual block
+        if w.monitored:
+            # reported on the (possibly re-targeted) wake core
+            w.unblock_channel().write_unblock()
+        w.on_unblock()
         return self.running
 
     # ------------------------------------------------------------ waiting
@@ -448,7 +585,7 @@ class UMTRuntime:
         """Scheduling point (paper §IV-B: cheap oversubscription check)."""
         w = current_worker()
         if isinstance(w, Worker) and w.rt is self:
-            self.drain_core(w.core)
+            self.drain_core(w.core, lazy=self.sharded)
 
     def wait_all(self, timeout=None):
         return self._quiet.wait(timeout)
@@ -457,6 +594,8 @@ class UMTRuntime:
     def stats(self) -> dict:
         s = self.tracer.stats(self.n_cores)
         s.update(self.stats_extra)
+        s["steals"] = (self.ready.steals.value if self.sharded else 0)
         s["n_workers"] = len(self._workers)
         s["umt"] = self.umt
+        s["sched"] = self.sched
         return s

@@ -86,8 +86,36 @@ class DependencyTracker:
         return n
 
 
+class AtomicCounter:
+    """Small atomic integer: writers serialise on a private lock (CPython
+    has no fetch-and-add), readers load ``.value`` directly — an attribute
+    read is a single bytecode, so it never contends and never blocks.
+
+    The read is *approximate* under concurrency (it may lag a concurrent
+    add by one), which is exactly the contract the scheduler needs: idle
+    checks and ``len(ready)`` tolerate staleness, the Leader's periodic
+    rescan (paper §III) corrects any transient misread.
+    """
+
+    __slots__ = ("value", "_lock")
+
+    def __init__(self, value: int = 0):
+        self.value = value
+        self._lock = threading.Lock()
+
+    def add(self, n: int = 1) -> int:
+        with self._lock:
+            self.value += n
+            return self.value
+
+    def __repr__(self):
+        return f"AtomicCounter({self.value})"
+
+
 class ReadyQueue:
-    """FIFO ready queue with a condition variable for sleeping workers."""
+    """Global FIFO ready queue — the pre-sharding scheduler, kept as the
+    ``sched="global"`` option so benchmarks can measure the sharded fast
+    path against it (see benchmarks/sched.py)."""
 
     def __init__(self):
         self._q = collections.deque()
@@ -114,3 +142,75 @@ class ReadyQueue:
     def __len__(self):
         with self.lock:
             return len(self._q)
+
+
+class ShardedReadyQueue:
+    """Per-core ready deques with work stealing — the scheduler fast path.
+
+    Shape follows the scx/sched_ext per-CPU dispatch queues: a producer
+    pushes to one shard (its own core for cache affinity), a consumer pops
+    its local shard FIFO, and only when the local deque is dry does it walk
+    the other shards and steal their *oldest* task (head steal keeps every
+    shard's FIFO order intact and globally approximates the old single
+    queue).  Each shard has its own lock, so same-core push/pop never
+    contends with other cores; ``len()`` reads an approximate
+    ``AtomicCounter`` and takes no lock at all.
+    """
+
+    def __init__(self, n_shards: int):
+        assert n_shards >= 1
+        self.n_shards = n_shards
+        self._qs = [collections.deque() for _ in range(n_shards)]
+        self._locks = [threading.Lock() for _ in range(n_shards)]
+        self._approx_len = AtomicCounter()
+        self._rr = AtomicCounter()
+        self.steals = AtomicCounter()
+
+    def select_shard(self) -> int:
+        """Round-robin home shard for external (non-worker) producers."""
+        return self._rr.add(1) % self.n_shards
+
+    def push(self, task: Task, shard: int):
+        with self._locks[shard]:
+            task.state = "ready"
+            self._qs[shard].append(task)
+        self._approx_len.add(1)
+
+    def push_front(self, task: Task, shard: int):
+        with self._locks[shard]:
+            task.state = "ready"
+            self._qs[shard].appendleft(task)
+        self._approx_len.add(1)
+
+    def pop_local(self, shard: int):
+        """Pop the oldest local task, or None. Lock-free empty fast path:
+        peeking an empty deque is safe under the GIL."""
+        if not self._qs[shard]:
+            return None
+        with self._locks[shard]:
+            if self._qs[shard]:
+                t = self._qs[shard].popleft()
+                t.state = "claimed"
+                self._approx_len.add(-1)
+                return t
+        return None
+
+    def steal(self, shard: int):
+        """Walk the other shards (nearest neighbour first) and steal the
+        oldest task of the first non-empty one -> (task, victim) or
+        (None, -1)."""
+        for i in range(1, self.n_shards):
+            victim = (shard + i) % self.n_shards
+            if not self._qs[victim]:
+                continue
+            with self._locks[victim]:
+                if self._qs[victim]:
+                    t = self._qs[victim].popleft()
+                    t.state = "claimed"
+                    self._approx_len.add(-1)
+                    self.steals.add(1)
+                    return t, victim
+        return None, -1
+
+    def __len__(self):
+        return max(0, self._approx_len.value)

@@ -69,12 +69,18 @@ class Tracer:
                 o += dt
             busy[core] = b / t_end if t_end > 0 else 0.0
             oversub[core] = o / t_end if t_end > 0 else 0.0
-        switches = sum(1 for e in self.events if e[1] == "block")
+        switches = steals = 0
+        for e in self.events:
+            if e[1] == "block":
+                switches += 1
+            elif e[1] == "steal":
+                steals += 1
         return {
             "makespan_s": t_end,
             "cpu_util": sum(busy.values()) / max(n_cores, 1),
             "oversub_frac": sum(oversub.values()) / max(n_cores, 1),
             "ctx_switches": switches,
+            "traced_steals": steals,
             "n_events": len(self.events),
             "per_core_busy": busy,
         }

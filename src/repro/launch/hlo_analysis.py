@@ -150,9 +150,8 @@ def measure(compiled) -> dict:
     so these numbers are only meaningful for *probe* modules (n_repeats=1/2,
     accum=1/2); the dry-run composes them linearly — see dryrun.probe_cell.
     """
-    ca = compiled.cost_analysis()
-    if isinstance(ca, list):
-        ca = ca[0]
+    from .hlo_cost import xla_cost_analysis
+    ca = xla_cost_analysis(compiled)
     st = collective_stats(compiled.as_text())
     return {
         "flops_dev": float(ca.get("flops", 0.0)),

@@ -332,5 +332,18 @@ class HloCost:
         return self.comp_cost(self.entry, True)
 
 
+def xla_cost_analysis(compiled) -> dict:
+    """XLA's own ``Compiled.cost_analysis()``, normalised across jaxlib
+    versions: older jaxlib returns a per-device *list* of dicts (we take
+    device 0 — the text is post-SPMD, all devices identical), newer jaxlib
+    returns the dict directly, and some backends return None."""
+    ca = compiled.cost_analysis()
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
 def analyze(compiled) -> Cost:
     return HloCost(compiled.as_text()).cost()

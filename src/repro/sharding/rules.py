@@ -72,7 +72,7 @@ def axis_size(mesh: Mesh, names: tuple[str, ...]) -> int:
 
 
 def _resolve_dim(dim: int, logical: str | None, mesh: Mesh,
-                 rules: dict, strict: bool) -> tuple[str, ...] | None:
+                 rules: dict, strict: bool) -> str | tuple[str, ...] | None:
     if logical is None:
         return None
     cands = rules.get(logical, ())
@@ -90,7 +90,12 @@ def _resolve_dim(dim: int, logical: str | None, mesh: Mesh,
         elif dim >= nxt:         # constraints may pad (<=2x waste)
             picked.append(a)
             size = nxt
-    return tuple(picked) or None
+    if not picked:
+        return None
+    # bare name for single-axis dims: older jax unwrapped 1-tuples inside
+    # PartitionSpec, newer jax preserves them — normalise here so spec
+    # entries compare stably across versions
+    return picked[0] if len(picked) == 1 else tuple(picked)
 
 
 def logical_spec(shape: tuple[int, ...], logical_axes: tuple[str | None, ...],

@@ -1,0 +1,47 @@
+"""Optional-`hypothesis` shim for the test suite.
+
+Offline machines don't have hypothesis; without this shim 4 of 9 test
+modules fail *collection* and pytest aborts the whole run.  Import the
+property-testing surface from here instead of from hypothesis directly:
+
+    from hypothesis_stub import HAVE_HYPOTHESIS, given, settings, st
+
+When hypothesis is installed this re-exports the real thing.  When it is
+not, ``@given(...)``-decorated property tests are skipped (pytest.mark.skip)
+while example-based tests in the same module still run.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # offline fallback: property tests skip
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for ``hypothesis.strategies``: any attribute is a
+        callable returning another stand-in, so module-level strategy
+        expressions (st.lists(st.integers(0, 3)), ...) still evaluate."""
+
+        def __getattr__(self, name):
+            return _AnyStrategy()
+
+        def __call__(self, *args, **kwargs):
+            return _AnyStrategy()
+
+        def __add__(self, other):
+            return _AnyStrategy()
+
+        def __or__(self, other):
+            return _AnyStrategy()
+
+    st = _AnyStrategy()
+
+    def given(*args, **kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco

@@ -11,6 +11,10 @@ from repro.models.lm import forward, init_cache
 from repro.steps import (cast_tree, init_train_state, make_prefill_step,
                          make_serve_step, make_train_step, OptHParams)
 
+# whole-module: jit-compiles a real forward/train step per architecture
+# (up to ~35 s each on CPU) — tier-1 only, not inner-loop
+pytestmark = pytest.mark.slow
+
 ARCHS = sorted(REGISTRY)
 
 

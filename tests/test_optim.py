@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_stub import given, settings, st
 
 from repro.optim import (OptHParams, adamw_init, adamw_update,
                          compress_grads, decompress_grads, ef_init,

@@ -5,7 +5,7 @@ import subprocess
 import sys
 
 import jax
-from hypothesis import given, settings, strategies as st
+from hypothesis_stub import given, settings, st
 
 from repro.sharding.rules import LOGICAL_RULES, logical_spec
 

@@ -11,6 +11,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# whole-module: every test here jit-compiles a real train step (or forks a
+# dry-run/XLA-compile subprocess) — minutes of wall time, not inner-loop
+pytestmark = pytest.mark.slow
+
 from repro.checkpoint import CheckpointManager
 from repro.configs import get
 from repro.core import UMTRuntime

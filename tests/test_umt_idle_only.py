@@ -63,6 +63,21 @@ def test_idle_only_reduces_event_traffic():
     assert fired_idle < 0.7 * fired_all, (fired_idle, fired_all)
 
 
+def test_idle_only_sharded_results_and_overlap():
+    """v2 notify composes with the sharded fast path: per-core krun locks
+    keep the edge-only accounting correct while tasks flow through
+    per-core deques and steals."""
+    t0 = time.monotonic()
+    with UMTRuntime(n_cores=2, umt=True, notify="idle_only",
+                    sched="sharded") as rt:
+        hs = [rt.submit(lambda i=i: (io.sleep(0.05), i * 3)[1])
+              for i in range(8)]
+        assert [h.wait() for h in hs] == [i * 3 for i in range(8)]
+    dt = time.monotonic() - t0
+    assert dt <= 0.35, dt            # blocked sleeps overlapped
+    assert rt.stats()["sched"] == "sharded"
+
+
 def test_idle_only_self_surrender_via_kernel_count():
     n = 5
     barrier = threading.Barrier(n)
