@@ -27,7 +27,8 @@ def bench_sched_fast_path(fast: bool):
         CSV_ROWS.append((f"{r.name}_c{r.cores}", 1e6 / r.tasks_s,
                          f"tasks_s={r.tasks_s:.0f};"
                          f"submit_p50_us={r.submit_p50_us:.1f};"
-                         f"steal_rate={r.steal_rate:.3f}"))
+                         f"steal_rate={r.steal_rate:.3f};"
+                         f"eff_task_us={r.effective_task_us:.0f}"))
         by_key[(r.cores, r.umt, r.sched, r.blocking)] = r
     for (cores, umt, sched_kind, blocking), r in sorted(by_key.items()):
         if sched_kind != "sharded":
@@ -41,6 +42,33 @@ def bench_sched_fast_path(fast: bool):
         CSV_ROWS.append((f"sched_sharded_vs_global_{tag}_c{cores}",
                          1e6 / r.tasks_s,
                          f"x_global={r.tasks_s / g.tasks_s:.2f}"))
+
+
+def bench_serve_continuous_batching(fast: bool):
+    """Serving under Poisson load: engine (umt on/off) vs static batch."""
+    from . import serve as serve_bench
+    argv = (["--loads", "32,128", "--requests", "16", "--gen", "8"]
+            if fast else [])
+    rows = serve_bench.main(argv)
+    by = {}
+    for r in rows:
+        CSV_ROWS.append((
+            f"{r.name}_l{r.load:g}", 1e6 / max(r.tokens_s, 1e-9),
+            f"tokens_s={r.tokens_s:.0f};occ={r.occupancy:.2f};"
+            f"p50_ms={r.p50_s * 1e3:.0f};p99_ms={r.p99_s * 1e3:.0f}"))
+        by[(r.name, r.load)] = r
+    for load in sorted({r.load for r in rows}):
+        e = by.get(("serve_engine_umt", load))
+        b = by.get(("serve_engine_base", load))
+        o = by.get(("serve_oneshot", load))
+        if e and o:
+            CSV_ROWS.append((f"serve_engine_vs_oneshot_l{load:g}",
+                             1e6 / e.tokens_s,
+                             f"x_oneshot={e.tokens_s / o.tokens_s:.2f}"))
+        if e and b:
+            CSV_ROWS.append((f"serve_umt_vs_base_l{load:g}",
+                             1e6 / e.tokens_s,
+                             f"x_base={e.tokens_s / b.tokens_s:.2f}"))
 
 
 def bench_heat_table_iii_iv(fast: bool):
@@ -120,10 +148,14 @@ def main() -> None:
     ap.add_argument("--skip-roofline", action="store_true")
     ap.add_argument("--skip-sched", action="store_true",
                     help="skip the scheduler microbenchmark matrix")
+    ap.add_argument("--skip-serve", action="store_true",
+                    help="skip the continuous-batching serve benchmark")
     args = ap.parse_args()
 
     if not args.skip_sched:
         bench_sched_fast_path(args.fast)
+    if not args.skip_serve:
+        bench_serve_continuous_batching(args.fast)
     bench_heat_table_iii_iv(args.fast)
     bench_fwi_table_i(args.fast)
     bench_overhead_table_ii(args.fast)

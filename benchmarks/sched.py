@@ -51,13 +51,33 @@ class SchedResult:
     wakes: int
     surrenders: int
     n_workers: int
+    effective_task_us: float = 0.0   # measured, not requested (see below)
 
     def row(self) -> str:
         return (f"{self.name},c={self.cores},tasks_s={self.tasks_s:.0f},"
                 f"submit_p50={self.submit_p50_us:.1f}us,"
                 f"submit_p99={self.submit_p99_us:.1f}us,"
                 f"steal_rate={self.steal_rate:.3f},wakes={self.wakes},"
-                f"surr={self.surrenders},workers={self.n_workers}")
+                f"surr={self.surrenders},workers={self.n_workers},"
+                f"eff_task={self.effective_task_us:.0f}us")
+
+
+def measure_sleep_granularity_us(task_us: float, reps: int = 15) -> float:
+    """Median measured duration of ``time.sleep(task_us)`` in µs.
+
+    Containers commonly floor short sleeps (this one: ~900 µs for a 50 µs
+    request), so a "50 µs" task graph really runs ~0.9 ms tasks.  Every
+    result carries the *measured* duration so tasks/sec numbers from
+    different machines are compared against the task size they actually
+    ran, not the one they asked for (ROADMAP: io.sleep-granularity
+    honesty)."""
+    xs = []
+    for _ in range(reps):
+        t0 = time.perf_counter_ns()
+        time.sleep(task_us * 1e-6)
+        xs.append((time.perf_counter_ns() - t0) / 1e3)
+    xs.sort()
+    return xs[len(xs) // 2]
 
 
 def _one_run(cores: int, umt: bool, sched: str, n_tasks: int,
@@ -104,13 +124,14 @@ def bench(cores: int, umt: bool, sched: str, n_tasks: int, task_us: float,
 
 
 def run_matrix(core_list, n_tasks, task_us, reps, blocking,
-               results, speedups):
+               results, speedups, effective_task_us=0.0):
     for cores in core_list:
         for umt in (False, True):
             per_sched = {}
             for sched in ("global", "sharded"):
                 r = bench(cores, umt, sched, n_tasks, task_us, reps,
                           blocking)
+                r.effective_task_us = effective_task_us
                 per_sched[sched] = r
                 results.append(r)
                 print(r.row(), flush=True)
@@ -146,13 +167,17 @@ def main(argv=None) -> list[SchedResult]:
         n_tasks = min(n_tasks, 1500)
         reps = min(reps, 2)
 
+    eff_us = measure_sleep_granularity_us(args.task_us)
+    print(f"CALIBRATION,requested_task_us={args.task_us:g},"
+          f"measured_task_us={eff_us:.1f}", flush=True)
+
     results: list[SchedResult] = []
     speedups: dict[tuple[int, bool, bool], float] = {}
     modes = ((True,) if args.blocking else
              (False, True) if args.both else (False,))
     for blocking in modes:
         run_matrix(core_list, n_tasks, args.task_us, reps, blocking,
-                   results, speedups)
+                   results, speedups, effective_task_us=eff_us)
     for (cores, umt, blocking), sp in sorted(speedups.items()):
         tag = ("umt" if umt else "base") + ("_blk" if blocking else "")
         print(f"SPEEDUP,{tag},c={cores},{sp:.2f}")

@@ -1,0 +1,245 @@
+"""Serving load benchmark: Poisson arrivals against the continuous-batching
+engine (umt on/off) and the static one-shot batch path.
+
+Requests arrive with exponential inter-arrival gaps at a configurable
+offered load (req/s) and identical prompts/generation budgets; every mode
+serves the same arrival trace and must emit identical greedy tokens
+(asserted).  Reported per (mode, load):
+
+  * tokens/s        — total emitted tokens / wall (first arrival -> drain);
+  * occupancy       — mean live-slot fraction per decode tick;
+  * p50/p99 latency — per-request submit -> response (seconds);
+
+Modes:
+
+  * engine_umt   — ServeEngine on the UMT runtime: request wait is a
+    monitored block, prefill/insert/decode/respond are tasks, a blocked
+    core is backfilled (the paper's point, at the serving layer);
+  * engine_base  — same engine, baseline runtime (blocked = idle core);
+  * oneshot      — static batching: collect up to `slots` queued requests,
+    prefill the batch, decode it to completion, repeat (pre-engine path).
+
+Expected shape of the results (tiny model, CPU): at moderate load the
+engine wins throughput *and* tail latency — arrival gaps are monitored
+blocks the runtime overlaps with prefill, and slots free as soon as a
+short sequence finishes.  At full burst (offered load >> service rate)
+the tiny model is dispatch-bound: the one-shot path's batched prefills
+and bare decode loop beat the engine's per-request prefills, and UMT's
+event traffic costs instead of paying — the paper's compute-bound
+overhead case, reproduced at the serving layer.
+
+  python -m benchmarks.serve [--loads 32,256] [--requests 32] [--slots 4]
+                             [--prompt-len 16] [--gen 16] [--cores 4]
+"""
+from __future__ import annotations
+
+import argparse
+import threading
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get
+from repro.launch.serve import _cache_len, _prompts
+from repro.models.lm import init_params
+from repro.serve import Request, RequestQueue, ServeEngine, make_jit_steps
+from repro.serve.engine import percentile
+from repro.steps import greedy_oneshot, make_serve_step
+
+
+@dataclass
+class ServeResult:
+    name: str
+    load: float
+    requests: int
+    slots: int
+    wall_s: float
+    tokens_s: float
+    occupancy: float
+    p50_s: float
+    p99_s: float
+
+    def row(self) -> str:
+        return (f"{self.name},load={self.load:g},req={self.requests},"
+                f"tokens_s={self.tokens_s:.0f},occ={self.occupancy:.2f},"
+                f"p50={self.p50_s * 1e3:.0f}ms,p99={self.p99_s * 1e3:.0f}ms")
+
+
+def _pct(xs, q):
+    return percentile(sorted(xs), q)
+
+
+def _mk_requests(prompts, patches, gens):
+    return [Request(i, prompts[i],
+                    patches=None if patches is None else patches[i],
+                    max_new_tokens=int(gens[i]))
+            for i in range(len(prompts))]
+
+
+def _feed(submit, close, reqs, gaps):
+    """Arrival process: submit each request after its exponential gap."""
+    for r, g in zip(reqs, gaps):
+        if g > 0:
+            time.sleep(g)
+        submit(r)
+    close()
+
+
+def run_engine(cfg, params, steps, prompts, gaps, *, gens, slots, cache_len,
+               umt, cores, patches=None) -> tuple[ServeResult, list]:
+    reqs = _mk_requests(prompts, patches, gens)
+    with ServeEngine(cfg, params, slots=slots, cache_len=cache_len,
+                     umt=umt, n_cores=cores, jit_steps=steps) as eng:
+        # timed region matches run_oneshot: first arrival -> drain (engine
+        # construction/teardown excluded, like the oneshot jits are)
+        t0 = time.monotonic()
+        _feed(eng.submit, eng.close, reqs, gaps)
+        eng.join()
+        wall = time.monotonic() - t0
+        st = eng.stats()
+    toks = [np.asarray(r.out_tokens, np.int32) for r in reqs]
+    lats = [r.latency for r in reqs]
+    res = ServeResult(
+        name=f"serve_engine_{'umt' if umt else 'base'}",
+        load=0.0, requests=len(reqs), slots=slots, wall_s=wall,
+        tokens_s=st["tokens_out"] / wall, occupancy=st["occupancy"],
+        p50_s=_pct(lats, 0.50), p99_s=_pct(lats, 0.99))
+    return res, toks
+
+
+def run_oneshot(cfg, params, prefill, serve_step, prompts, gaps, *, gens,
+                slots, patches=None) -> tuple[ServeResult, list]:
+    """Static batching: up to ``slots`` queued requests per round; the
+    whole batch decodes until its *longest* sequence finishes (finished
+    requests hold their slot — the weakness continuous batching removes).
+    """
+    reqs = _mk_requests(prompts, patches, gens)
+    q = RequestQueue()
+    th = threading.Thread(target=_feed, args=(q.put, q.close, reqs, gaps))
+    t0 = time.monotonic()
+    th.start()
+    ticks = occ = 0
+    while True:
+        r = q.get()
+        if r is None:
+            break
+        batch = [r]
+        while len(batch) < slots and len(q) > 0:
+            batch.append(q.get())
+        k = len(batch)
+        bgen = max(b.max_new for b in batch)
+        pad = [batch[0]] * (slots - k)           # pad rows: repeat req 0
+        ptoks = np.stack([np.asarray(b.tokens) for b in batch + pad])
+        pp = None if patches is None else \
+            jnp.asarray(np.stack([b.patches for b in batch + pad]))
+        outs = np.asarray(greedy_oneshot(prefill, serve_step, params,
+                                         jnp.asarray(ptoks), pp, bgen))
+        for t in range(bgen - 1):
+            ticks += 1
+            occ += sum(1 for b in batch if b.max_new - 1 > t) / slots
+        t_end = time.monotonic()
+        for j, b in enumerate(batch):
+            b.out_tokens = list(outs[j, :b.max_new])
+            b.t_first = b.t_done = t_end   # batch completes as one
+            b.done.set()
+    wall = time.monotonic() - t0
+    th.join()
+    toks = [np.asarray(r.out_tokens, np.int32) for r in reqs]
+    lats = [r.latency for r in reqs]
+    res = ServeResult(
+        name="serve_oneshot", load=0.0, requests=len(reqs), slots=slots,
+        wall_s=wall, tokens_s=sum(len(t) for t in toks) / wall,
+        occupancy=occ / max(ticks, 1),
+        p50_s=_pct(lats, 0.50), p99_s=_pct(lats, 0.99))
+    return res, toks
+
+
+def main(argv=None) -> list[ServeResult]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-14b")
+    ap.add_argument("--loads", default="32,256",
+                    help="offered loads in req/s (comma-separated)")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16,
+                    help="max new tokens; per-request budgets are drawn "
+                         "uniformly from [max(1, gen//4), gen]")
+    ap.add_argument("--fixed-gen", action="store_true",
+                    help="all requests generate exactly --gen tokens")
+    ap.add_argument("--cores", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    loads = [float(x) for x in args.loads.split(",")]
+
+    cfg = get(args.arch).tiny()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    cache_len = _cache_len(cfg, args.prompt_len, args.gen)
+    steps = make_jit_steps(cfg, cache_len=cache_len)
+    prefill = steps[0]
+    serve_step = jax.jit(make_serve_step(cfg))
+    # frontend-correct shapes (audio codebook dim, vision patches)
+    prompts, patches = _prompts(cfg, args.requests, args.prompt_len)
+    prompts = np.asarray(prompts)
+    patches = None if patches is None else np.asarray(patches)
+    rng = np.random.default_rng(args.seed)
+    gens = (np.full(args.requests, args.gen) if args.fixed_gen else
+            rng.integers(max(1, args.gen // 4), args.gen + 1,
+                         args.requests))
+
+    # warm every shape (oneshot batch prefill + serve step, and — via a
+    # throwaway engine leg — the engine's batch=1 prefill, insert, masked
+    # decode and its small eager ops) so no timed leg pays XLA compile
+    wp = None if patches is None else jnp.asarray(patches[:args.slots])
+    cache, logits = prefill(params, jnp.asarray(prompts[:args.slots]), wp)
+    serve_step(params, cache, jnp.argmax(logits, -1).astype(jnp.int32))
+    run_engine(cfg, params, steps, prompts[:2 * args.slots],
+               np.zeros(2 * args.slots), gens=gens, slots=args.slots,
+               cache_len=cache_len, umt=True, cores=args.cores,
+               patches=patches)
+
+    results: list[ServeResult] = []
+    for load in loads:
+        gaps = np.random.default_rng(args.seed).exponential(
+            1.0 / load, args.requests)
+        runs = {}
+        for umt in (True, False):
+            res, toks = run_engine(
+                cfg, params, steps, prompts, gaps, gens=gens,
+                slots=args.slots, cache_len=cache_len, umt=umt,
+                cores=args.cores, patches=patches)
+            res.load = load
+            runs[res.name] = (res, toks)
+            results.append(res)
+            print(res.row(), flush=True)
+        res, toks = run_oneshot(cfg, params, prefill, serve_step, prompts,
+                                gaps, gens=gens, slots=args.slots,
+                                patches=patches)
+        res.load = load
+        runs[res.name] = (res, toks)
+        results.append(res)
+        print(res.row(), flush=True)
+
+        # every mode serves the same trace -> identical greedy tokens
+        ref = runs["serve_engine_umt"][1]
+        for name, (_, toks) in runs.items():
+            for i, (a, b) in enumerate(zip(ref, toks)):
+                assert np.array_equal(a, b), (
+                    f"token mismatch: serve_engine_umt vs {name} "
+                    f"@ load {load}, request {i}")
+        eng, base = runs["serve_engine_umt"][0], runs["serve_oneshot"][0]
+        ub = runs["serve_engine_base"][0]
+        print(f"  -> load={load:g}: engine/oneshot tokens_s = "
+              f"{eng.tokens_s / base.tokens_s:.2f}x, "
+              f"p99 {eng.p99_s * 1e3:.0f}ms vs {base.p99_s * 1e3:.0f}ms; "
+              f"umt/base tokens_s = {eng.tokens_s / ub.tokens_s:.2f}x",
+              flush=True)
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,16 @@
-"""Serve a small model with batched requests: prefill a batch of prompts
-of different (padded) lengths, then decode greedily — one fused decode
-step per token across the whole batch, exactly what the decode_32k /
-long_500k dry-run cells lower at production scale.
+"""Serve a small model two ways and compare:
+
+  * ``oneshot`` — prefill one static batch of padded prompts, decode the
+    whole batch to completion (the pre-engine path);
+  * ``engine``  — continuous batching on the UMT runtime: requests arrive
+    over time, are prefilled and inserted into free slots while decode
+    keeps running, and finished sequences free their slot immediately.
+
+Any given request's greedy tokens are identical under both paths (the
+engine run below serves more requests than the one-shot batch, so the
+printed samples differ; tests/test_serve_engine.py asserts the per-request
+equivalence).  The engine keeps its slots busy under staggered arrivals
+instead of waiting for the whole batch.
 
     PYTHONPATH=src python examples/serve_batch.py [--arch jamba-v0.1-52b]
 """
@@ -14,5 +23,8 @@ ap.add_argument("--arch", default="jamba-v0.1-52b",
                 help="any assigned architecture (tiny variant is used)")
 args = ap.parse_args()
 
-serve(["--arch", args.arch, "--tiny", "--batch", "4",
-       "--prompt-len", "24", "--gen", "12"])
+common = ["--arch", args.arch, "--tiny", "--batch", "4",
+          "--prompt-len", "24", "--gen", "12"]
+serve(common + ["--mode", "oneshot"])
+serve(common + ["--mode", "engine", "--requests", "8",
+                "--arrival-ms", "20"])

@@ -123,13 +123,24 @@ class UMTPrefetcher:
             self.issued_at.setdefault(step, time.monotonic())
 
         def fetch():
-            out = self.source.fetch(step)
-            with self.lock:
-                if step not in self.results:
-                    self.results[step] = out
-            self.done[step].set()
+            self._fulfil(step, self.source.fetch(step))
 
         self.rt.submit(fetch, name=f"prefetch{step}")
+
+    def _fulfil(self, step: int, out):
+        """Publish a fetched batch — state lookup and result insert under
+        one lock.  A straggler (re-issued fetch's loser) that completes
+        *after* ``get()`` already popped the step's state must be a no-op:
+        unguarded, it would KeyError on ``self.done[step]`` (swallowed
+        into the task's exc) and re-insert a never-collected entry into
+        ``self.results``."""
+        with self.lock:
+            ev = self.done.get(step)
+            if ev is None:          # already collected: late retry, drop
+                return
+            if step not in self.results:
+                self.results[step] = out
+            ev.set()
 
     def get(self, step: int):
         """Blocks (monitored if called from a worker) until batch ready."""
@@ -154,9 +165,5 @@ class UMTPrefetcher:
 
     def _reissue(self, step: int):
         def fetch():
-            out = self.source.fetch(step)
-            with self.lock:
-                if step not in self.results:
-                    self.results[step] = out
-            self.done[step].set()
+            self._fulfil(step, self.source.fetch(step))
         self.rt.submit(fetch, name=f"prefetch{step}.retry")

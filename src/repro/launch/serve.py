@@ -1,7 +1,13 @@
-"""Batched serving driver: prefill a batch of prompts, decode greedily.
+"""Serving driver — thin CLI over the continuous-batching engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --tiny \
-        --batch 4 --prompt-len 32 --gen 16
+        --slots 4 --requests 8 --prompt-len 32 --gen 16
+
+``--mode engine`` (default) runs ``repro.serve.ServeEngine``: requests
+flow through the monitored queue, prefill/insert/decode/respond run as
+UMT tasks, finished slots free immediately.  ``--mode oneshot`` keeps the
+pre-engine behaviour — prefill one static batch, decode it to completion —
+as the comparison baseline (same greedy tokens, tested).
 """
 from __future__ import annotations
 
@@ -11,41 +17,37 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..configs import get
 from ..models.lm import init_params
-from ..steps import cast_tree, make_prefill_step, make_serve_step
+from ..steps import make_prefill_step, make_serve_step
 from .mesh import make_host_mesh
 
 
-def serve(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2.5-14b")
-    ap.add_argument("--tiny", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    args = ap.parse_args(argv)
-
-    cfg = get(args.arch)
-    if args.tiny:
-        cfg = cfg.tiny()
-    mesh = make_host_mesh() if jax.device_count() == 1 else None
-    params = init_params(cfg, jax.random.PRNGKey(0))
-    cache_len = args.prompt_len + args.gen + (
-        cfg.n_patches if cfg.frontend == "vision_patches" else 0)
-
-    prefill = jax.jit(make_prefill_step(cfg, mesh, cache_len=cache_len))
-    decode = jax.jit(make_serve_step(cfg, mesh), donate_argnums=(1,))
-
-    shp = (args.batch, args.prompt_len)
+def _prompts(cfg, batch, prompt_len, seed=1):
+    shp = (batch, prompt_len)
     if cfg.frontend == "audio_codebooks":
         shp = shp + (cfg.n_codebooks,)
-    prompts = jax.random.randint(jax.random.PRNGKey(1), shp, 0, cfg.vocab)
+    prompts = jax.random.randint(jax.random.PRNGKey(seed), shp, 0, cfg.vocab)
     patches = None
     if cfg.frontend == "vision_patches":
-        patches = jnp.zeros((args.batch, cfg.n_patches, cfg.d_model),
+        patches = jnp.zeros((batch, cfg.n_patches, cfg.d_model),
                             jnp.dtype(cfg.dtype))
+    return prompts, patches
+
+
+def _cache_len(cfg, prompt_len, gen):
+    return prompt_len + gen + (
+        cfg.n_patches if cfg.frontend == "vision_patches" else 0)
+
+
+def serve_oneshot(cfg, params, mesh, args):
+    """Pre-engine path: prefill one batch, decode greedily to the end."""
+    cache_len = _cache_len(cfg, args.prompt_len, args.gen)
+    prefill = jax.jit(make_prefill_step(cfg, mesh, cache_len=cache_len))
+    decode = jax.jit(make_serve_step(cfg, mesh), donate_argnums=(1,))
+    prompts, patches = _prompts(cfg, args.batch, args.prompt_len)
 
     t0 = time.time()
     cache, last_logits = prefill(params, prompts, patches)
@@ -61,6 +63,7 @@ def serve(argv=None):
 
     gen = jnp.concatenate(out, axis=1)
     print(json.dumps({
+        "mode": "oneshot",
         "arch": cfg.name,
         "prefill_s": round(t_prefill, 3),
         "decode_s_per_tok": round(t_decode / max(args.gen - 1, 1), 4),
@@ -68,6 +71,82 @@ def serve(argv=None):
         "sample": [int(x) for x in jnp.ravel(gen)[:8]],
     }))
     return gen
+
+
+def serve_engine(cfg, params, mesh, args):
+    """Continuous batching: a slot pool fed by a monitored request queue."""
+    from ..serve import Request, ServeEngine
+
+    cache_len = _cache_len(cfg, args.prompt_len, args.gen)
+    prompts, patches = _prompts(cfg, args.requests, args.prompt_len)
+    prompts = np.asarray(prompts)
+
+    t0 = time.time()
+    with ServeEngine(cfg, params, slots=args.batch, cache_len=cache_len,
+                     mesh=mesh, umt=not args.no_umt,
+                     n_cores=args.cores) as eng:
+        reqs = []
+        for i in range(args.requests):
+            reqs.append(Request(
+                i, prompts[i],
+                patches=None if patches is None else np.asarray(patches[i]),
+                max_new_tokens=args.gen))
+            eng.submit(reqs[-1])
+            if args.arrival_ms:
+                time.sleep(args.arrival_ms / 1e3)
+        eng.close()
+        eng.join()
+        stats = eng.stats()
+    wall = time.time() - t0
+
+    gen = jnp.asarray(np.stack(
+        [np.asarray(r.out_tokens, np.int32) for r in reqs]))
+    print(json.dumps({
+        "mode": "engine",
+        "arch": cfg.name,
+        "umt": not args.no_umt,
+        "wall_s": round(wall, 3),
+        "tokens_s": round(stats["tokens_out"] / wall, 1),
+        "occupancy": round(stats["occupancy"], 3),
+        "p50_latency_s": round(stats["p50_latency_s"], 4),
+        "p99_latency_s": round(stats["p99_latency_s"], 4),
+        "generated_shape": list(gen.shape),
+        "sample": [int(x) for x in jnp.ravel(gen)[:8]],
+    }))
+    return gen
+
+
+def serve(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-14b")
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--mode", choices=("engine", "oneshot"),
+                    default="engine")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="slot-pool size (engine) / batch size (oneshot)")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="engine: total requests to serve (default: batch)")
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--arrival-ms", type=float, default=0.0,
+                    help="engine: gap between request arrivals")
+    ap.add_argument("--no-umt", action="store_true",
+                    help="engine: baseline runtime (blocked = idle core)")
+    ap.add_argument("--cores", type=int, default=None,
+                    help="engine: runtime core count")
+    args = ap.parse_args(argv)
+    if args.requests <= 0:
+        args.requests = args.batch
+
+    cfg = get(args.arch)
+    if args.tiny:
+        cfg = cfg.tiny()
+    mesh = make_host_mesh() if jax.device_count() == 1 else None
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    if args.mode == "oneshot":
+        return serve_oneshot(cfg, params, mesh, args)
+    return serve_engine(cfg, params, mesh, args)
 
 
 if __name__ == "__main__":

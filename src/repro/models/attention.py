@@ -125,7 +125,9 @@ def qchunk_attention(q, k, v, *, window=None, chunk=512, scale=None):
 
 
 def decode_attention(q, k_cache, v_cache, pos, *, window=None, scale=None):
-    """q: (B,1,H,Dh); caches: (B,Sc,Hkv,Dh) sequence-sharded; pos scalar.
+    """q: (B,1,H,Dh); caches: (B,Sc,Hkv,Dh) sequence-sharded; pos is a
+    scalar (all rows at the same position) or (B,) per-slot positions
+    (continuous batching: every slot decodes at its own depth).
 
     Partial-softmax formulation: every op reduces *over* the sharded
     sequence dim (max/sum/contraction -> small ARs), so XLA never needs to
@@ -136,15 +138,18 @@ def decode_attention(q, k_cache, v_cache, pos, *, window=None, scale=None):
     kf = shard(_expand_kv(k_cache, h), "batch", "seq_shard", None, None)
     vf = shard(_expand_kv(v_cache, h), "batch", "seq_shard", None, None)
     slots = jnp.arange(sc)
+    per_slot = jnp.ndim(pos) == 1
+    pp = pos[:, None] if per_slot else pos          # (B,1) | scalar
     if window is None:
-        valid = slots <= pos
+        valid = slots <= pp
     else:
-        slot_pos = pos - jnp.mod(pos - slots, sc)   # ring: sc == window
+        slot_pos = pp - jnp.mod(pp - slots, sc)     # ring: sc == window
         valid = slot_pos >= 0
     bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+    bias = bias[:, None, None, :] if per_slot else bias[None, None, None, :]
     scale = (dh ** -0.5) if scale is None else scale
     scores = jnp.einsum("bqhd,bkhd->bhqk", q, kf).astype(jnp.float32)
-    scores = scores * scale + bias[None, None, None, :]
+    scores = scores * scale + bias
     if _BASELINE:
         probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
         return jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
@@ -186,6 +191,17 @@ def gqa_cache_shapes(cfg, spec, batch, seq):
     return {"k": (kv, ax), "v": (kv, ax)}
 
 
+def _cache_update(c, u, idx):
+    """Write the decode-step update ``u`` (B,1,...) into cache ``c``
+    (B,Sc,...) at sequence index ``idx`` — scalar (one shared position)
+    or (B,) per-slot positions (a batched scatter; rows are independent,
+    so a continuous-batching engine can hold slots at different depths)."""
+    if jnp.ndim(idx) == 0:
+        return jax.lax.dynamic_update_slice(
+            c, u.astype(c.dtype), (0, idx) + (0,) * (c.ndim - 2))
+    return c.at[jnp.arange(c.shape[0]), idx].set(u[:, 0].astype(c.dtype))
+
+
 def _pad_seq(t, target):
     """Right-pad dim 1 (sequence) with zeros up to `target` slots."""
     if target is None or t.shape[1] >= target:
@@ -215,16 +231,15 @@ def gqa_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None):
         v = v + p["bv"].astype(dt).reshape(hkv, dh)
 
     if mode == "decode":
+        rp = pos[:, None] if jnp.ndim(pos) == 1 else pos   # (B,1) | scalar
         if cfg.pos_emb == "rope":
-            q = apply_rope(q, pos, cfg.rope_theta)
-            k = apply_rope(k, pos, cfg.rope_theta)
+            q = apply_rope(q, rp, cfg.rope_theta)
+            k = apply_rope(k, rp, cfg.rope_theta)
         kc, vc = cache["k"], cache["v"]
         w = spec.window
         idx = jnp.mod(pos, kc.shape[1]) if w is not None else pos
-        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
-                                          (0, idx, 0, 0))
-        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
-                                          (0, idx, 0, 0))
+        kc = _cache_update(kc, k, idx)
+        vc = _cache_update(vc, v, idx)
         kc = shard(kc, "batch", "seq_shard", None, None)
         vc = shard(vc, "batch", "seq_shard", None, None)
         out = decode_attention(q, kc, vc, pos, window=w)
@@ -239,10 +254,14 @@ def gqa_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None):
             out = qchunk_attention(q, k, v, window=spec.window)
             w = spec.window
             if w is not None:
-                if s >= w:
-                    kc, vc = k[:, s - w:], v[:, s - w:]  # ring: slot = pos % W
+                # the ring only needs min(window, cache_len) slots: with
+                # total length capped at cache_len no token can be older
+                # than the window before the cache itself runs out
+                ring = w if cache_len is None else min(w, cache_len)
+                if s >= ring:
+                    kc, vc = k[:, s - ring:], v[:, s - ring:]  # slot=pos%W
                 else:
-                    kc, vc = _pad_seq(k, w), _pad_seq(v, w)
+                    kc, vc = _pad_seq(k, ring), _pad_seq(v, ring)
             else:
                 kc, vc = _pad_seq(k, cache_len), _pad_seq(v, cache_len)
             new_cache = {
@@ -310,14 +329,14 @@ def mla_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None):
 
     if mode == "decode":
         # absorbed decode: scores live in the latent space.
-        q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
-        k_rope = apply_rope(k_rope[:, :, None, :], pos,
+        per_slot = jnp.ndim(pos) == 1
+        rp = pos[:, None] if per_slot else pos             # (B,1) | scalar
+        q_rope = apply_rope(q_rope, rp, cfg.rope_theta)
+        k_rope = apply_rope(k_rope[:, :, None, :], rp,
                             cfg.rope_theta)[:, :, 0, :]
         cc, kr = cache["ckv"], cache["krope"]
-        cc = jax.lax.dynamic_update_slice(cc, ckv.astype(cc.dtype),
-                                          (0, pos, 0))
-        kr = jax.lax.dynamic_update_slice(kr, k_rope.astype(kr.dtype),
-                                          (0, pos, 0))
+        cc = _cache_update(cc, ckv, pos)
+        kr = _cache_update(kr, k_rope, pos)
         cc = shard(cc, "batch", "seq_shard", None)
         kr = shard(kr, "batch", "seq_shard", None)
         wk_b = p["wk_b"].astype(dt).reshape(rkv, h, dn)
@@ -326,8 +345,10 @@ def mla_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None):
         scores = (jnp.einsum("bshr,btr->bhst", q_lat, cc) +
                   jnp.einsum("bshr,btr->bhst", q_rope, kr))
         scores = scores.astype(jnp.float32) * scale
-        valid = jnp.arange(cc.shape[1]) <= pos
-        scores = scores + jnp.where(valid, 0.0, NEG_INF)[None, None, None, :]
+        valid = jnp.arange(cc.shape[1]) <= rp              # (B,T) | (T,)
+        mb = jnp.where(valid, 0.0, NEG_INF)
+        scores = scores + (mb[:, None, None, :] if per_slot
+                           else mb[None, None, None, :])
         probs = jax.nn.softmax(scores, axis=-1).astype(dt)
         lat = jnp.einsum("bhst,btr->bshr", probs, cc)          # (B,1,H,rkv)
         out = jnp.einsum("bshr,rhv->bshv", lat,

@@ -27,11 +27,12 @@ def rope_freqs(dim: int, theta: float):
 
 
 def apply_rope(x, pos, theta=10_000.0):
-    """x: (..., S, H, Dh) or (..., S, Dh); pos: (S,) or scalar broadcast."""
+    """x: (..., S, H, Dh) or (..., S, Dh); pos: scalar, (S,), or (B, S)
+    (per-slot decode positions, continuous batching) — broadcast over x."""
     dh = x.shape[-1]
     freqs = jnp.asarray(rope_freqs(dh, theta))           # (dh/2,)
-    angles = jnp.asarray(pos, jnp.float32)[..., None] * freqs  # (S, dh/2)
-    if x.ndim == angles.ndim + 2:                        # heads dim present
+    angles = jnp.asarray(pos, jnp.float32)[..., None] * freqs  # (..., S, dh/2)
+    if x.ndim == 4 and angles.ndim >= 2:                 # heads dim present
         angles = angles[..., None, :]
     cos, sin = jnp.cos(angles), jnp.sin(angles)
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)

@@ -136,7 +136,9 @@ def forward(params, cfg, tokens, *, mode="train", pos=0, cache=None,
     """tokens: (B,S[,K]) int32. Returns {"logits","cache","aux"}.
 
     mode: "train" (full logits) | "prefill" (cache + last logits) |
-    "decode" (S==1, cache updated at ``pos``).
+    "decode" (S==1, cache updated at ``pos`` — a scalar, or a (B,) vector
+    of per-slot positions for continuous batching, where every batch row
+    decodes at its own depth).
     """
     dt = jnp.dtype(cfg.dtype)
     x = embed_tokens(tokens, params["embed"], cfg, dt)
@@ -146,7 +148,11 @@ def forward(params, cfg, tokens, *, mode="train", pos=0, cache=None,
     b, s, _ = x.shape
     positions = pos + jnp.arange(s) if mode != "decode" else pos
     if cfg.pos_emb == "sinusoidal":
-        pp = jnp.atleast_1d(jnp.asarray(positions))
+        pp = jnp.asarray(positions)
+        # per-slot decode positions (B,) -> (B, 1) so the embedding
+        # broadcasts per row instead of across the batch
+        pp = pp[:, None] if (mode == "decode" and pp.ndim == 1) \
+            else jnp.atleast_1d(pp)
         x = x + sinusoidal_pos(pp, cfg.d_model).astype(dt)
     x = shard(x, "batch", "seq", "embed")
 

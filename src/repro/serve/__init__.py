@@ -1,0 +1,62 @@
+"""``repro.serve`` — continuous-batching serve engine on the UMT runtime.
+
+Why this lives on UMT (paper mapping)
+-------------------------------------
+The paper's thesis is that a thread blocked in the kernel should not idle
+its core: a runtime *notified* of block/unblock events (per-core eventfd
+channels, §III) schedules other ready work there.  Serving is the one
+workload in this repo that is naturally I/O-driven, and it maps onto the
+paper's model one-to-one:
+
+  =====================  ==========================================
+  serving event          paper's block/unblock model
+  =====================  ==========================================
+  request wait           monitored block (``io.wait`` on the queue)
+  request arrival        unblock -> eventfd wake, Leader reschedules
+  response write         monitored block (``io.call`` on the sink)
+  idle slot pool         decode task blocks; core runs prefill
+  weights load           monitored file reads overlap request wait
+  =====================  ==========================================
+
+So a worker blocked on request arrival idles no core — the runtime runs
+prefill, decode ticks, response writes, or checkpointed-weights loading
+there instead.  With ``umt=False`` the same task graph runs on the
+baseline runtime (blocked worker = idle core), which is exactly the
+engine-level A/B that ``benchmarks/serve.py`` measures.
+
+Continuous batching
+-------------------
+A fixed pool of ``slots`` sequences shares one batched KV cache whose
+``pos`` is per-slot (``init_slot_cache``).  Finished sequences free their
+slot immediately; new prompts are prefilled batch=1 and *inserted*
+(``make_insert_step`` scatters the prefilled row into the pool) while
+decode keeps ticking over live slots (``make_decode_step``, active-slot
+masked).  Greedy outputs are bit-identical to the one-shot serve path for
+any arrival order and slot schedule (tested).
+
+Usage
+-----
+::
+
+    from repro.configs import get
+    from repro.models.lm import init_params
+    from repro.serve import Request, ServeEngine
+
+    cfg = get("qwen2.5-14b").tiny()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    with ServeEngine(cfg, params, slots=4, cache_len=48) as eng:
+        reqs = [Request(i, prompt_i, max_new_tokens=16) for i in ...]
+        for r in reqs:
+            eng.submit(r)        # any time, from any thread
+        eng.close()              # no more arrivals
+        eng.join()               # drain
+    print(eng.stats())           # tokens/s inputs, occupancy, p50/p99
+
+The CLI front-end is ``python -m repro.launch.serve --mode engine``
+(``--mode oneshot`` keeps the pre-engine one-shot batch path for
+comparison); the load benchmark is ``python -m benchmarks.serve``.
+"""
+from .engine import ServeEngine, make_jit_steps
+from .request import Request, RequestQueue
+
+__all__ = ["ServeEngine", "Request", "RequestQueue", "make_jit_steps"]

@@ -1,0 +1,364 @@
+"""Continuous-batching serve engine on the UMT runtime.
+
+A fixed pool of ``slots`` serve slots shares one batched KV cache
+(``init_slot_cache``: per-slot ``pos``, every slot at its own depth).
+Finished sequences free their slot immediately; newly arrived prompts are
+prefilled (batch=1) and *inserted* into free slots while decode keeps
+running over the live slots — no global barrier, no waiting for the
+slowest sequence in a static batch.
+
+Everything I/O- or compute-shaped runs as a UMT task on the runtime:
+
+  * **intake**   — blocks on the request queue (monitored ``io.wait``);
+  * **prefill**  — one task per request, fanned out by intake;
+  * **decode**   — the driver task: insert pending prefills, run one
+    masked decode tick over the pool, collect finished slots; blocks
+    (monitored) when no slot is live;
+  * **respond**  — one task per finished request (response write through
+    the monitored shim when a sink is configured);
+  * **weights**  — optional checkpointed-weights load, so a core idled by
+    request wait can load weights instead (paper's whole point).
+
+Correctness bar (tested): for any arrival order and slot schedule, each
+request's greedy tokens are identical to the one-shot serve path's.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+
+import numpy as np
+
+from ..core import UMTRuntime, io
+from ..steps import (init_slot_cache, make_decode_step, make_insert_step,
+                     make_prefill_step)
+from .request import Request, RequestQueue
+
+try:  # jax is present everywhere we run; guard only for doc tooling
+    import jax
+    import jax.numpy as jnp
+except ImportError:  # pragma: no cover
+    jax = jnp = None
+
+
+def percentile(xs, q):
+    """Nearest-rank percentile of a pre-sorted list (None when empty) —
+    shared by ``ServeEngine.stats`` and ``benchmarks/serve.py``."""
+    return xs[min(len(xs) - 1, int(len(xs) * q))] if xs else None
+
+
+def make_jit_steps(cfg, mesh=None, cache_len: int = 64):
+    """(prefill, insert, decode) jitted once — pass as ``jit_steps`` to
+    several ``ServeEngine`` instances (benchmark A/B legs) so XLA compiles
+    each step a single time per process."""
+    return (jax.jit(make_prefill_step(cfg, mesh, cache_len=cache_len)),
+            jax.jit(make_insert_step(cfg, mesh)),
+            jax.jit(make_decode_step(cfg, mesh)))
+
+
+class ServeEngine:
+    """Continuous-batching engine over one model + one slot pool.
+
+    Parameters
+    ----------
+    cfg : ModelConfig
+    params : pytree or callable
+        Model parameters, or a zero-arg callable (e.g. a checkpoint
+        restore) run as a UMT task at start — weights loading overlaps
+        request wait.
+    slots : int
+        Slot-pool size == decode batch.
+    cache_len : int
+        Shared cache length; every request needs
+        ``prompt_len (+ n_patches) + max_new_tokens <= cache_len``.
+    rt : UMTRuntime, optional
+        Runtime to run on; when omitted the engine owns one
+        (``umt``/``n_cores`` configure it).
+    response_sink : callable, optional
+        Called (monitored) with each finished request from its respond
+        task — the "response write".
+    """
+
+    def __init__(self, cfg, params, *, slots: int = 4, cache_len: int = 64,
+                 mesh=None, rt: UMTRuntime | None = None, umt: bool = True,
+                 n_cores: int | None = None, response_sink=None,
+                 idle_wait: float = 0.05, jit_steps=None):
+        self.cfg = cfg
+        self.slots = slots
+        self.cache_len = cache_len
+        self.mesh = mesh
+        self.response_sink = response_sink
+        self.idle_wait = idle_wait
+        self.rt = rt if rt is not None else UMTRuntime(
+            n_cores=n_cores, umt=umt, trace=False)
+        self._own_rt = rt is None
+        # the baseline runtime never backfills a blocked worker's core, so
+        # intake (blocked on the queue) + the decode driver permanently
+        # occupy two workers — prefill needs at least a third to make
+        # progress (with UMT on, blocks are monitored and free their core)
+        assert self.rt.umt or self.rt.n_cores >= 3, (
+            "ServeEngine on a baseline (umt=False) runtime needs "
+            "n_cores >= 3: intake and decode occupy a worker each")
+
+        self.queue = RequestQueue()
+        if jit_steps is not None:
+            self.prefill, self.insert, self.decode = jit_steps
+        else:
+            self.prefill, self.insert, self.decode = make_jit_steps(
+                cfg, mesh, cache_len)
+
+        self._params = None if callable(params) else params
+        self._params_fn = params if callable(params) else None
+        self._params_ready = threading.Event()
+        self._load_exc: BaseException | None = None
+        if self._params_fn is None:
+            self._params_ready.set()
+
+        self.cache = init_slot_cache(cfg, slots, cache_len,
+                                     jnp.dtype(cfg.dtype))
+        extra = ((cfg.n_codebooks,) if cfg.frontend == "audio_codebooks"
+                 else ())
+        # hot-path state is device-resident: the decode loop never syncs
+        # to host — tokens are fetched once per *finished* request.  The
+        # device mask is always jnp.array (a copy): asarray may alias the
+        # numpy buffer, which async dispatch could then read *after* a
+        # later host-side mutation of self._active.
+        self._tokens = jnp.zeros((slots, 1) + extra, jnp.int32)
+        self._active = np.zeros((slots,), bool)
+        self._active_dev = jnp.array(self._active)
+        self._slot_req: list[Request | None] = [None] * slots
+        self._inserts: collections.deque = collections.deque()
+        self._lock = threading.Lock()          # inserts/counters only
+        self._pending_prefills = 0
+        self._intake_done = False
+        self._work = threading.Event()         # decode-driver doorbell
+        self._started = False
+        self._h_intake = self._h_decode = None
+
+        # bounded stats state — a long-running engine must not retain
+        # finished Request objects (prompts/patches/tokens) forever
+        self._n_completed = 0
+        self._tokens_out = 0
+        self._lat_samples: collections.deque = collections.deque(
+            maxlen=4096)
+        self._ttft_samples: collections.deque = collections.deque(
+            maxlen=4096)
+        self.stats_ticks = 0
+        self.stats_occupancy_sum = 0.0
+        self.stats_decode_tokens = 0
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self):
+        assert not self._started
+        self._started = True
+        if self._params_fn is not None:
+            self.rt.submit(self._load_params, name="serve.weights")
+        self._h_intake = self.rt.submit(self._intake, name="serve.intake")
+        self._h_decode = self.rt.submit(self._decode_loop,
+                                        name="serve.decode")
+        return self
+
+    def submit(self, req: Request):
+        self.queue.put(req)
+
+    def close(self):
+        """No more submissions; queued/in-flight requests still finish."""
+        self.queue.close()
+
+    def join(self):
+        """Wait for intake + decode to drain (call after :meth:`close`)."""
+        if self._h_intake is not None:
+            self._h_intake.wait()
+        if self._h_decode is not None:
+            self._h_decode.wait()
+        self.rt.wait_all()
+
+    def shutdown(self):
+        self.close()
+        if self._started:
+            self.join()
+        if self._own_rt:
+            self.rt.shutdown()
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.shutdown()
+
+    # ------------------------------------------------------------ the tasks
+    def _load_params(self):
+        try:
+            self._params = self._params_fn()
+        except BaseException as e:     # noqa: BLE001 — re-raised by prefill
+            self._load_exc = e
+            raise
+        finally:
+            self._params_ready.set()   # hang-proof: waiters always released
+            self._work.set()
+
+    def _intake(self):
+        while True:
+            req = self.queue.get()            # monitored block: idles no core
+            if req is None:
+                break
+            with self._lock:
+                self._pending_prefills += 1
+            self.rt.submit(self._prefill_one, req,
+                           name=f"serve.prefill:{req.rid}")
+        with self._lock:
+            self._intake_done = True
+        self._work.set()
+
+    def _prefill_one(self, req: Request):
+        exc = None
+        try:
+            io.wait(self._params_ready)
+            if self._load_exc is not None:
+                raise RuntimeError("weights load failed") \
+                    from self._load_exc
+            p = self.cfg.n_patches \
+                if self.cfg.frontend == "vision_patches" else 0
+            plen = int(np.asarray(req.tokens).shape[0]) + p
+            if plen + req.max_new > self.cache_len:
+                # hard error (not assert): under python -O an oversized
+                # request would decode past the cache and silently emit
+                # corrupt tokens — out-of-bounds scatters are dropped
+                raise ValueError(
+                    f"request {req.rid}: prompt {plen} + max_new "
+                    f"{req.max_new} exceeds cache_len {self.cache_len}")
+            tok = jnp.asarray(req.tokens)[None]
+            patches = None if req.patches is None else \
+                jnp.asarray(req.patches)[None]
+            row_cache, logits = self.prefill(self._params, tok, patches)
+            t0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (1,1,…)
+            # force the first token before stamping TTFT — dispatch is
+            # async, so the monotonic() above the sync would under-report
+            t0.block_until_ready()
+            req.t_first = time.monotonic()
+            req.out_tokens.append(t0[0, 0])
+            if req.max_new == 1:              # done straight from prefill
+                self._finish(req)
+            else:
+                with self._lock:
+                    self._inserts.append((req, row_cache, t0))
+        except BaseException as e:            # noqa: BLE001 — kept on req
+            exc = e
+            raise
+        finally:
+            # the decrement comes *after* a successful insert append, so
+            # the decode driver can never observe "drained" while a
+            # prefilled row is still on its way to a slot; on failure the
+            # request fails loudly (Request.wait re-raises) instead of
+            # hanging join()
+            with self._lock:
+                self._pending_prefills -= 1
+            if exc is not None and not req.done.is_set():
+                req.error = exc
+                req.t_done = time.monotonic()
+                req.done.set()
+            self._work.set()
+
+    def _finish(self, req: Request):
+        """Complete a request inline (one stacked device->host sync per
+        request, not one per token); the response *write* — when a sink
+        is configured — is its own UMT task so slow consumers never stall
+        the decode loop."""
+        req.out_tokens = list(np.asarray(jnp.stack(req.out_tokens)))
+        req.t_done = time.monotonic()
+        with self._lock:
+            self._n_completed += 1
+            self._tokens_out += len(req.out_tokens)
+            self._lat_samples.append(req.latency)
+            self._ttft_samples.append(req.ttft)
+        req.done.set()
+        if self.response_sink is not None:
+            self.rt.submit(self._respond, req,
+                           name=f"serve.respond:{req.rid}")
+
+    def _respond(self, req: Request):
+        io.call(self.response_sink, req)      # monitored response write
+
+    # ------------------------------------------------------- decode driver
+    def _do_inserts(self):
+        while True:
+            free = np.flatnonzero(~self._active)
+            if len(free) == 0:
+                return
+            with self._lock:
+                if not self._inserts:
+                    return
+                req, row_cache, t0 = self._inserts.popleft()
+            s = int(free[0])
+            self.cache = self.insert(self.cache, row_cache, jnp.int32(s))
+            self._tokens = self._tokens.at[s].set(t0[0])
+            self._active[s] = True
+            self._active_dev = jnp.array(self._active)
+            self._slot_req[s] = req
+            req.slot = s
+
+    def _tick(self):
+        self._tokens, self.cache = self.decode(
+            self._params, self.cache, self._tokens, self._active_dev)
+        n_live = int(self._active.sum())
+        self.stats_ticks += 1
+        self.stats_decode_tokens += n_live
+        self.stats_occupancy_sum += n_live / self.slots
+        freed = False
+        for s in np.flatnonzero(self._active):
+            req = self._slot_req[s]
+            req.out_tokens.append(self._tokens[s, 0])   # device, no sync
+            if len(req.out_tokens) >= req.max_new:
+                self._active[s] = False       # slot freed immediately
+                self._slot_req[s] = None
+                freed = True
+                self._finish(req)
+        if freed:
+            self._active_dev = jnp.array(self._active)
+
+    def _drained(self) -> bool:
+        with self._lock:
+            return (self._intake_done and not self._inserts
+                    and self._pending_prefills == 0)
+
+    def _decode_loop(self):
+        while True:
+            self._do_inserts()
+            if self._active.any():
+                self._tick()
+                continue
+            if self._drained():
+                break
+            self._work.clear()
+            with self._lock:
+                pending = bool(self._inserts)
+            if pending:
+                continue
+            # nothing live: monitored wait frees this core for prefill /
+            # weights / intake work (timeout is only a belt-and-braces
+            # fallback for the clear/set race above)
+            io.wait(self._work, self.idle_wait)
+
+    # ------------------------------------------------------------ reporting
+    def stats(self) -> dict:
+        """Latency quantiles come from a bounded sample window (the most
+        recent 4096 completions), counts are exact."""
+        with self._lock:
+            n = self._n_completed
+            tokens_out = self._tokens_out
+            lats = sorted(self._lat_samples)
+            ttfts = sorted(self._ttft_samples)
+        return {
+            "requests": n,
+            "slots": self.slots,
+            "ticks": self.stats_ticks,
+            "decode_tokens": self.stats_decode_tokens,
+            "tokens_out": tokens_out,
+            "occupancy": (self.stats_occupancy_sum / self.stats_ticks
+                          if self.stats_ticks else 0.0),
+            "p50_latency_s": percentile(lats, 0.50),
+            "p99_latency_s": percentile(lats, 0.99),
+            "p50_ttft_s": percentile(ttfts, 0.50),
+            "p99_ttft_s": percentile(ttfts, 0.99),
+        }

@@ -1,0 +1,115 @@
+"""Serve-side request/response plumbing.
+
+``RequestQueue`` is the engine's arrival channel, wired through the
+monitored-I/O shim exactly like ``UMTPrefetcher``: a consumer task that
+blocks in :meth:`RequestQueue.get` writes the paper's block event, so the
+runtime can schedule prefill, decode, or response work on that core while
+the queue is empty — request wait is a *monitored block*, not a busy core.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+
+from ..core import io
+
+
+class Request:
+    """One generation request: a prompt plus generation budget.
+
+    ``tokens``: int32 prompt of shape (P,) — or (P, K) for audio-codebook
+    frontends; ``patches``: optional (n_patches, d_model) vision embeddings;
+    ``max_new_tokens``: total tokens to emit (the prefill argmax counts as
+    the first one, matching the one-shot serve path).
+    """
+
+    __slots__ = ("rid", "tokens", "patches", "max_new", "out_tokens",
+                 "t_submit", "t_first", "t_done", "done", "slot", "error")
+
+    def __init__(self, rid, tokens, patches=None, max_new_tokens: int = 16):
+        assert max_new_tokens >= 1
+        self.rid = rid
+        self.tokens = tokens
+        self.patches = patches
+        self.max_new = max_new_tokens
+        self.out_tokens: list = []
+        self.t_submit: float | None = None
+        self.t_first: float | None = None
+        self.t_done: float | None = None
+        self.done = threading.Event()
+        self.slot: int | None = None
+        self.error: BaseException | None = None
+
+    # ---- latency accessors (seconds; None until the request completes)
+    @property
+    def ttft(self):
+        if self.t_submit is None or self.t_first is None:
+            return None
+        return self.t_first - self.t_submit
+
+    @property
+    def latency(self):
+        if self.t_submit is None or self.t_done is None:
+            return None
+        return self.t_done - self.t_submit
+
+    def wait(self, timeout=None):
+        """Block (monitored inside a worker) until the response is ready.
+        Re-raises the engine-side failure (bad request geometry, weights
+        load error) instead of returning an empty token list."""
+        io.wait(self.done, timeout)
+        if self.error is not None:
+            raise self.error
+        return self.out_tokens
+
+    def __repr__(self):
+        state = ("failed" if self.error is not None
+                 else "done" if self.done.is_set() else "pending")
+        return f"<Request {self.rid} {state} n_out={len(self.out_tokens)}>"
+
+
+class RequestQueue:
+    """FIFO arrival queue; ``get()`` is a *monitored* blocking wait.
+
+    ``put`` marks the request's submit time (arrival, for latency stats).
+    ``close`` drains: queued requests are still returned, then ``get``
+    yields ``None`` forever.
+    """
+
+    def __init__(self):
+        self._q: collections.deque = collections.deque()
+        self._lock = threading.Lock()
+        self._avail = threading.Event()
+        self._closed = False
+
+    def put(self, req: Request):
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("RequestQueue is closed")
+            req.t_submit = time.monotonic()
+            self._q.append(req)
+            self._avail.set()
+
+    def close(self):
+        with self._lock:
+            self._closed = True
+            self._avail.set()
+
+    def get(self):
+        """Next request, blocking (monitored) until one arrives.
+        Returns ``None`` once the queue is closed and drained."""
+        while True:
+            with self._lock:
+                if self._q:
+                    req = self._q.popleft()
+                    if not self._q and not self._closed:
+                        self._avail.clear()
+                    return req
+                if self._closed:
+                    return None
+            io.wait(self._avail)
+
+    def __len__(self):
+        with self._lock:
+            return len(self._q)

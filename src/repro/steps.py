@@ -104,5 +104,82 @@ def make_serve_step(cfg, mesh=None):
     return serve_step
 
 
+def greedy_oneshot(prefill, serve_step, params, prompts, patches, gen):
+    """The one-shot greedy path: batched prefill, then ``gen - 1`` decode
+    ticks; returns the (B, gen[, K]) token array.  The single reference
+    implementation the engine equivalence tests and serve benchmarks
+    compare against."""
+    cache, logits = prefill(params, prompts, patches)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [tok]
+    for _ in range(gen - 1):
+        tok, cache = serve_step(params, cache, tok)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)
+
+
+# ------------------------------------------------- continuous-batching steps
+def init_slot_cache(cfg, slots: int, cache_len: int, dtype):
+    """Batched KV cache shared by a pool of ``slots`` serve slots: same
+    leaves as :func:`init_cache` but ``pos`` is a (slots,) vector — every
+    slot decodes at its own depth (continuous batching)."""
+    cache = init_cache(cfg, slots, cache_len, jnp.dtype(dtype))
+    cache["pos"] = jnp.zeros((slots,), jnp.int32)
+    return cache
+
+
+def make_insert_step(cfg, mesh=None):
+    """Scatter one prefilled request (a batch=1 cache from
+    ``make_prefill_step`` with the pool's ``cache_len``) into slot ``slot``
+    of the shared batched cache, replacing every leaf row — so whatever a
+    dead slot wrote there while it was idle is erased.
+
+    (cache, row_cache, slot) -> cache with slot ``slot`` replaced.
+    ``slot`` may be a traced scalar: one jit covers every slot.
+    """
+
+    def insert_step(cache, row_cache, slot):
+        with sharding_ctx(mesh, DECODE_RULES):
+            def put(c, r):
+                start = (0, slot) + (0,) * (c.ndim - 2)
+                return jax.lax.dynamic_update_slice(c, r.astype(c.dtype),
+                                                    start)
+
+            blocks = jax.tree.map(put, cache["blocks"], row_cache["blocks"])
+            pos = cache["pos"].at[slot].set(
+                row_cache["pos"].astype(jnp.int32))
+            return {"pos": pos, "blocks": blocks}
+
+    return insert_step
+
+
+def make_decode_step(cfg, mesh=None):
+    """Masked continuous-batching decode over the slot pool:
+    (params, cache, tokens, active) -> (next_tokens, cache).
+
+    ``cache["pos"]`` is (slots,) per-slot positions; ``active`` is a
+    (slots,) bool mask.  Dead slots emit token 0 and do not advance
+    ``pos`` — their rows still flow through the batched matmuls (rows are
+    independent, MoE capacity is per-row) but can never corrupt a live
+    slot's sampling, and an insert replaces their whole row anyway."""
+
+    def decode_step(params, cache, tokens, active):
+        with sharding_ctx(mesh, DECODE_RULES):
+            pc = cast_tree(params, cfg.dtype)
+            out = forward(pc, cfg, tokens, mode="decode", pos=cache["pos"],
+                          cache=cache)
+            nxt = jnp.argmax(out["logits"], axis=-1).astype(jnp.int32)
+            amask = active.reshape((-1,) + (1,) * (nxt.ndim - 1))
+            nxt = jnp.where(amask, nxt, 0)
+            new_cache = out["cache"]
+            new_cache["pos"] = jnp.where(active, cache["pos"] + 1,
+                                         cache["pos"])
+            return nxt, new_cache
+
+    return decode_step
+
+
 __all__ = ["init_train_state", "make_train_step", "make_prefill_step",
-           "make_serve_step", "cast_tree", "init_cache", "OptHParams"]
+           "make_serve_step", "make_insert_step", "make_decode_step",
+           "init_slot_cache", "greedy_oneshot", "cast_tree", "init_cache",
+           "OptHParams"]

@@ -1,0 +1,76 @@
+"""UMTPrefetcher: ordering, straggler re-issue, and the late-retry race
+(a straggler completing after ``get()`` popped the step's state must be a
+no-op, not a swallowed KeyError + a leaked ``results`` entry)."""
+import threading
+
+import numpy as np
+
+from repro.core import UMTRuntime
+from repro.data import SyntheticTokenSource, UMTPrefetcher
+
+
+class GatedSource:
+    """Wraps the synthetic source; the *first* fetch of a gated step
+    blocks until its gate is set (later fetches are instant) — lets a
+    test hold a straggler open past the consumer's ``get()``."""
+
+    def __init__(self):
+        self.base = SyntheticTokenSource(seed=0, batch=4, seq=8, vocab=64)
+        self.gate: dict = {}
+        self.calls: dict = {}
+        self.lock = threading.Lock()
+
+    def fetch(self, step):
+        with self.lock:
+            n = self.calls[step] = self.calls.get(step, 0) + 1
+            g = self.gate.get(step)
+        if n == 1 and g is not None:
+            g.wait(10)
+        return self.base.fetch(step)
+
+
+def test_prefetcher_returns_source_batches_in_order():
+    src = SyntheticTokenSource(seed=3, batch=4, seq=8, vocab=64)
+    with UMTRuntime(n_cores=2, umt=True, trace=False) as rt:
+        pf = UMTPrefetcher(src, rt, depth=2)
+        for step in range(5):
+            got = pf.get(step)
+            want = src.fetch(step)
+            assert np.array_equal(got["tokens"], want["tokens"])
+        rt.wait_all()
+
+
+def test_late_retry_straggler_is_dropped():
+    """Regression: hold the original fetch open, let the re-issued fetch
+    win and ``get()`` collect the step, then release the straggler — it
+    must neither raise (KeyError on ``done[step]``, silently swallowed
+    into the task's exc) nor re-insert a never-collected ``results``
+    entry."""
+    src = GatedSource()
+    gate = threading.Event()
+    src.gate[0] = gate
+    with UMTRuntime(n_cores=2, umt=True, trace=False) as rt:
+        handles = []
+        orig = rt.submit
+
+        def spy(*a, **k):
+            h = orig(*a, **k)
+            handles.append(h)
+            return h
+
+        rt.submit = spy
+        try:
+            pf = UMTPrefetcher(src, rt, depth=1, reissue_after=0.05)
+            out = pf.get(0)             # straggler forces one re-issue
+            assert pf.reissued == 1
+            gate.set()                  # straggler completes *after* get()
+            rt.wait_all()
+        finally:
+            rt.submit = orig
+        with pf.lock:
+            assert 0 not in pf.results, "late retry resurrected results"
+            assert 0 not in pf.done, "late retry resurrected done event"
+        for h in handles:
+            assert h.exc is None, f"prefetch task raised: {h.exc!r}"
+    want = src.base.fetch(0)
+    assert np.array_equal(out["tokens"], want["tokens"])

@@ -1,0 +1,167 @@
+"""ServeEngine: request-queue semantics (fast) and engine/one-shot greedy
+token equivalence under randomized arrival orders and slot churn (slow)."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.serve import Request, RequestQueue
+
+
+# ------------------------------------------------------- queue (no jit, fast)
+def test_request_queue_fifo_and_close():
+    q = RequestQueue()
+    reqs = [Request(i, None) for i in range(3)]
+    for r in reqs:
+        q.put(r)
+    q.close()
+    assert [q.get().rid for _ in range(3)] == [0, 1, 2]
+    assert q.get() is None
+    assert q.get() is None              # stays drained
+    with pytest.raises(RuntimeError):
+        q.put(Request(9, None))
+
+
+def test_request_queue_put_stamps_arrival():
+    q = RequestQueue()
+    r = Request(0, None)
+    assert r.t_submit is None
+    q.put(r)
+    assert r.t_submit is not None
+
+
+def test_request_queue_get_blocks_until_put():
+    q = RequestQueue()
+    got = []
+
+    def consumer():
+        got.append(q.get())
+
+    th = threading.Thread(target=consumer)
+    th.start()
+    time.sleep(0.05)
+    assert not got                      # blocked, nothing queued
+    r = Request(7, None)
+    q.put(r)
+    th.join(2)
+    assert got and got[0] is r
+
+
+# ------------------------------------------------- engine equivalence (slow)
+@pytest.fixture(scope="module")
+def built():
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get
+    from repro.models.lm import init_params
+    from repro.serve import make_jit_steps
+    from repro.steps import greedy_oneshot, make_serve_step
+
+    cfg = get("qwen2.5-14b").tiny()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    n_req, plen, gen_max = 8, 8, 6
+    cache_len = plen + gen_max
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (n_req, plen), 0, cfg.vocab))
+    steps = make_jit_steps(cfg, cache_len=cache_len)
+    serve_step = jax.jit(make_serve_step(cfg))
+
+    # one-shot reference: all requests in one static batch
+    ref = np.asarray(greedy_oneshot(steps[0], serve_step, params,
+                                    jnp.asarray(prompts), None, gen_max))
+    return dict(cfg=cfg, params=params, prompts=prompts, steps=steps,
+                ref=ref, n_req=n_req, gen_max=gen_max, cache_len=cache_len)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed,umt", [(0, True), (1, True), (2, False)])
+def test_engine_matches_oneshot_under_random_arrivals(built, seed, umt):
+    """Randomized arrival order, arrival gaps, and generation budgets over
+    a 3-slot pool (slots < requests forces churn): every request's greedy
+    tokens must equal its one-shot row, on the UMT runtime and baseline."""
+    from repro.serve import ServeEngine
+
+    b = built
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(b["n_req"])
+    gens = rng.integers(1, b["gen_max"] + 1, b["n_req"])  # incl. gen==1
+    gaps = rng.exponential(0.005, b["n_req"])
+
+    reqs = {int(i): Request(int(i), b["prompts"][i],
+                            max_new_tokens=int(gens[i])) for i in order}
+    with ServeEngine(b["cfg"], b["params"], slots=3,
+                     cache_len=b["cache_len"], umt=umt, n_cores=4,
+                     jit_steps=b["steps"]) as eng:
+        for i, g in zip(order, gaps):
+            eng.submit(reqs[int(i)])
+            if g > 0:
+                time.sleep(g)
+        eng.close()
+        eng.join()
+        stats = eng.stats()
+
+    for i, r in reqs.items():
+        assert r.done.is_set()
+        got = np.asarray(r.out_tokens, np.int32)
+        assert got.shape == (r.max_new,)
+        assert np.array_equal(got, b["ref"][i, :r.max_new]), (
+            f"request {i} (seed {seed}, umt {umt})")
+    assert stats["requests"] == b["n_req"]
+    assert 0.0 < stats["occupancy"] <= 1.0
+    assert stats["p50_latency_s"] <= stats["p99_latency_s"]
+
+
+@pytest.mark.slow
+def test_oversized_request_fails_loudly(built):
+    """A request that cannot fit the pool cache fails its prefill; the
+    failure lands on the request (wait re-raises) instead of returning an
+    empty token list or hanging join()."""
+    from repro.serve import ServeEngine
+
+    b = built
+    with ServeEngine(b["cfg"], b["params"], slots=2,
+                     cache_len=b["cache_len"], umt=True, n_cores=4,
+                     jit_steps=b["steps"]) as eng:
+        bad = Request(0, b["prompts"][0], max_new_tokens=b["cache_len"])
+        good = Request(1, b["prompts"][1], max_new_tokens=2)
+        eng.submit(bad)
+        eng.submit(good)
+        eng.close()
+        eng.join()                      # must not hang on the failure
+    assert bad.done.is_set() and bad.error is not None
+    with pytest.raises(ValueError, match="exceeds cache_len"):
+        bad.wait()
+    assert np.array_equal(np.asarray(good.wait(), np.int32),
+                          b["ref"][1, :2])
+
+
+@pytest.mark.slow
+def test_engine_response_sink_and_weights_load_task(built):
+    """Callable params (checkpointed-weights load) runs as a UMT task
+    before the first prefill; the response sink sees every request."""
+    from repro.serve import ServeEngine
+
+    b = built
+    seen = []
+    loaded = []
+
+    def load():
+        loaded.append(True)
+        return b["params"]
+
+    with ServeEngine(b["cfg"], load, slots=2, cache_len=b["cache_len"],
+                     umt=True, n_cores=4, jit_steps=b["steps"],
+                     response_sink=seen.append) as eng:
+        reqs = [Request(i, b["prompts"][i], max_new_tokens=3)
+                for i in range(4)]
+        for r in reqs:
+            eng.submit(r)
+        eng.close()
+        eng.join()
+
+    assert loaded == [True]
+    assert sorted(r.rid for r in seen) == [0, 1, 2, 3]
+    for r in reqs:
+        got = np.asarray(r.out_tokens, np.int32)
+        assert np.array_equal(got, b["ref"][r.rid, :3])

@@ -1,0 +1,174 @@
+"""Continuous-batching serve steps across frontends: slot insert/evict and
+masked decode must reproduce the one-shot path's greedy tokens for plain
+token LMs, ``vision_patches`` and ``audio_codebooks`` configs, and the
+SWA/MoE and MLA attention families."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.models.lm import init_params
+from repro.steps import (greedy_oneshot, init_slot_cache, make_decode_step,
+                         make_insert_step, make_prefill_step,
+                         make_serve_step)
+
+# whole-module: jit-compiles prefill/insert/decode per architecture —
+# tier-1 only, not inner-loop
+pytestmark = pytest.mark.slow
+
+# plain GQA, SWA+MoE, MLA, vision frontend, audio frontend
+ARCHS = ["qwen2.5-14b", "mixtral-8x7b", "minicpm3-4b", "internvl2-2b",
+         "musicgen-large"]
+SLOTS, PLEN, GEN = 3, 8, 4
+
+
+@pytest.fixture(scope="module")
+def built():
+    return {}
+
+
+def _build(arch, built):
+    if arch not in built:
+        cfg = get(arch).tiny()
+        cache_len = PLEN + GEN + (
+            cfg.n_patches if cfg.frontend == "vision_patches" else 0)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        shp = (SLOTS, PLEN) + ((cfg.n_codebooks,) if cfg.frontend ==
+                               "audio_codebooks" else ())
+        prompts = jax.random.randint(jax.random.PRNGKey(1), shp, 0,
+                                     cfg.vocab)
+        patches = None
+        if cfg.frontend == "vision_patches":
+            patches = jax.random.normal(
+                jax.random.PRNGKey(2), (SLOTS, cfg.n_patches, cfg.d_model),
+                jnp.float32) * 0.02
+        built[arch] = dict(
+            cfg=cfg, params=params, cache_len=cache_len, prompts=prompts,
+            patches=patches,
+            prefill=jax.jit(make_prefill_step(cfg, cache_len=cache_len)),
+            serve=jax.jit(make_serve_step(cfg)),
+            insert=jax.jit(make_insert_step(cfg)),
+            decode=jax.jit(make_decode_step(cfg)),
+        )
+    return built[arch]
+
+
+def _oneshot_reference(b):
+    """Batched prefill + scalar-pos decode (the pre-engine path)."""
+    return np.asarray(greedy_oneshot(b["prefill"], b["serve"], b["params"],
+                                     b["prompts"], b["patches"], GEN))
+
+
+def _row_prefill(b, i):
+    patches = b["patches"]
+    rc, rl = b["prefill"](b["params"], b["prompts"][i:i + 1],
+                          None if patches is None else patches[i:i + 1])
+    return rc, jnp.argmax(rl, axis=-1).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_scrambled_insert_matches_oneshot(arch, built):
+    """Insert rows in a scrambled slot order, decode fully active: every
+    slot's greedy stream equals the one-shot batch's row."""
+    b = _build(arch, built)
+    cfg = b["cfg"]
+    ref = _oneshot_reference(b)
+
+    pool = init_slot_cache(cfg, SLOTS, b["cache_len"], jnp.dtype(cfg.dtype))
+    extra = ((cfg.n_codebooks,) if cfg.frontend == "audio_codebooks"
+             else ())
+    toks = jnp.zeros((SLOTS, 1) + extra, jnp.int32)
+    outs = {}
+    for r in (2, 0, 1):                       # arrival != slot-id order
+        rc, t0 = _row_prefill(b, r)
+        pool = b["insert"](pool, rc, jnp.int32(r))
+        toks = toks.at[r].set(t0[0])
+        outs[r] = [t0]
+    active = jnp.ones((SLOTS,), bool)
+    for _ in range(GEN - 1):
+        toks, pool = b["decode"](b["params"], pool, toks, active)
+        for r in outs:
+            outs[r].append(toks[r:r + 1])
+    got = np.concatenate(
+        [np.asarray(jnp.concatenate(outs[r], axis=1))
+         for r in range(SLOTS)], axis=0)
+    assert np.array_equal(ref, got)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_evict_and_reuse_slot_mid_decode(arch, built):
+    """Slot churn: request A decodes alone (other slots dead), is evicted
+    (mask off) when done, and its slot is reused by request B mid-stream —
+    both streams must match the one-shot rows, and the dead slots'
+    garbage must never leak into a live slot."""
+    b = _build(arch, built)
+    cfg = b["cfg"]
+    ref = _oneshot_reference(b)
+
+    pool = init_slot_cache(cfg, SLOTS, b["cache_len"], jnp.dtype(cfg.dtype))
+    extra = ((cfg.n_codebooks,) if cfg.frontend == "audio_codebooks"
+             else ())
+    toks = jnp.zeros((SLOTS, 1) + extra, jnp.int32)
+    active = np.zeros((SLOTS,), bool)
+
+    # A = request 0 into slot 1; decodes 2 ticks alone
+    rc, t0 = _row_prefill(b, 0)
+    pool = b["insert"](pool, rc, jnp.int32(1))
+    toks = toks.at[1].set(t0[0])
+    active[1] = True
+    out_a = [t0]
+    for _ in range(2):
+        toks, pool = b["decode"](b["params"], pool, toks,
+                                 jnp.array(active))
+        out_a.append(toks[1:2])
+
+    # B = request 2 arrives into dead slot 0 while A keeps decoding
+    rc, t0 = _row_prefill(b, 2)
+    pool = b["insert"](pool, rc, jnp.int32(0))
+    toks = toks.at[0].set(t0[0])
+    active[0] = True
+    out_b = [t0]
+    toks, pool = b["decode"](b["params"], pool, toks, jnp.array(active))
+    out_a.append(toks[1:2])
+    out_b.append(toks[0:1])
+
+    # A done (GEN tokens collected): evict, reuse its slot for request 1
+    active[1] = False
+    rc, t0 = _row_prefill(b, 1)
+    pool = b["insert"](pool, rc, jnp.int32(1))
+    toks = toks.at[1].set(t0[0])
+    active[1] = True
+    out_c = [t0]
+    for _ in range(GEN - 1):
+        toks, pool = b["decode"](b["params"], pool, toks,
+                                 jnp.array(active))
+        if len(out_b) < GEN:
+            out_b.append(toks[0:1])
+            if len(out_b) == GEN:
+                active[0] = False     # B done: evicted mid-stream
+        out_c.append(toks[1:2])
+
+    got_a = np.asarray(jnp.concatenate(out_a, axis=1))[0]
+    got_b = np.asarray(jnp.concatenate(out_b, axis=1))[0]
+    got_c = np.asarray(jnp.concatenate(out_c, axis=1))[0]
+    assert np.array_equal(got_a, ref[0])
+    assert np.array_equal(got_b, ref[2])
+    assert np.array_equal(got_c, ref[1])
+
+
+def test_masked_decode_freezes_dead_slot_pos():
+    """Dead slots emit token 0 and their pos does not advance."""
+    b = _build("qwen2.5-14b", {})
+    cfg = b["cfg"]
+    pool = init_slot_cache(cfg, SLOTS, b["cache_len"], jnp.dtype(cfg.dtype))
+    rc, t0 = _row_prefill(b, 0)
+    pool = b["insert"](pool, rc, jnp.int32(2))
+    toks = jnp.zeros((SLOTS, 1), jnp.int32).at[2].set(t0[0])
+    active = jnp.asarray([False, False, True])
+    pos0 = np.asarray(pool["pos"])
+    toks, pool = b["decode"](b["params"], pool, toks, active)
+    pos1 = np.asarray(pool["pos"])
+    assert pos1[2] == pos0[2] + 1
+    assert pos1[0] == pos0[0] and pos1[1] == pos0[1]
+    assert int(toks[0, 0]) == 0 and int(toks[1, 0]) == 0

@@ -276,6 +276,33 @@ def test_sharded_steals_are_traced():
     assert traced == s["traced_steals"]
 
 
+# ------------------------------------------------- Leader batching/ratelimit
+def test_leader_coalesces_drains_and_rate_limits_scans():
+    """A burst of fine-grained monitored tasks: the Leader coalesces all
+    ready eventfds per wakeup (drains happen, counted) and runs at most
+    ~one leader_scan per scan_min_gap instead of one per wakeup."""
+    t0 = time.monotonic()
+    with UMTRuntime(n_cores=2, umt=True) as rt:
+        for _ in range(100):
+            rt.submit(lambda: io.sleep(0.0005))
+        rt.wait_all()
+        dt = time.monotonic() - t0
+        s = rt.stats()
+    assert s["leader_wakeups"] >= 1
+    assert s["leader_drains"] >= 1
+    assert s["leader_scans"] <= dt / rt.scan_min_gap + 16, s
+
+
+def test_leader_scan_rate_limit_disabled_still_schedules():
+    """scan_min_gap=0 restores scan-per-wakeup; everything still runs."""
+    with UMTRuntime(n_cores=2, umt=True, scan_min_gap=0.0) as rt:
+        hs = [rt.submit(lambda: io.sleep(0.002)) for _ in range(20)]
+        [h.wait() for h in hs]
+        rt.wait_all()
+        s = rt.stats()
+    assert s["leader_scans"] >= 1
+
+
 # ------------------------------------------------------------ runtime basic
 def test_runtime_runs_tasks_and_results():
     with UMTRuntime(n_cores=2) as rt:
