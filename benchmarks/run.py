@@ -47,7 +47,11 @@ def bench_sched_fast_path(fast: bool):
 def bench_serve_continuous_batching(fast: bool):
     """Serving under Poisson load: engine (umt on/off) vs static batch."""
     from . import serve as serve_bench
-    argv = (["--loads", "32,128", "--requests", "16", "--gen", "8"]
+    # --fast keeps the pre-PR-3 load-sweep-only shape: the equal-memory
+    # and long-prompt jitter phases (512-token prefills, interleaved
+    # repeats) belong to the full run
+    argv = (["--loads", "32,128", "--requests", "16", "--gen", "8",
+             "--skip-phases"]
             if fast else [])
     rows = serve_bench.main(argv)
     by = {}

@@ -1,5 +1,6 @@
 """Serving load benchmark: Poisson arrivals against the continuous-batching
-engine (umt on/off) and the static one-shot batch path.
+engine (paged KV + batched/chunked prefill; umt on/off; dense legacy) and
+the static one-shot batch path.
 
 Requests arrive with exponential inter-arrival gaps at a configurable
 offered load (req/s) and identical prompts/generation budgets; every mode
@@ -9,27 +10,33 @@ serves the same arrival trace and must emit identical greedy tokens
   * tokens/s        — total emitted tokens / wall (first arrival -> drain);
   * occupancy       — mean live-slot fraction per decode tick;
   * p50/p99 latency — per-request submit -> response (seconds);
+  * pages_peak      — peak KV page-pool occupancy (paged modes);
 
 Modes:
 
-  * engine_umt   — ServeEngine on the UMT runtime: request wait is a
-    monitored block, prefill/insert/decode/respond are tasks, a blocked
-    core is backfilled (the paper's point, at the serving layer);
+  * engine_umt   — ServeEngine on the UMT runtime: paged KV cache,
+    arrivals coalesced into batched prefill rounds, request wait is a
+    monitored block, a blocked core is backfilled (the paper's point, at
+    the serving layer);
   * engine_base  — same engine, baseline runtime (blocked = idle core);
+  * engine_dense — UMT engine with the seed's dense per-slot cache
+    (page_size=None): the paging A/B;
   * oneshot      — static batching: collect up to `slots` queued requests,
     prefill the batch, decode it to completion, repeat (pre-engine path).
 
-Expected shape of the results (tiny model, CPU): at moderate load the
-engine wins throughput *and* tail latency — arrival gaps are monitored
-blocks the runtime overlaps with prefill, and slots free as soon as a
-short sequence finishes.  At full burst (offered load >> service rate)
-the tiny model is dispatch-bound: the one-shot path's batched prefills
-and bare decode loop beat the engine's per-request prefills, and UMT's
-event traffic costs instead of paying — the paper's compute-bound
-overhead case, reproduced at the serving layer.
+Beyond the load sweep, two targeted phases (ISSUE 3 acceptance):
+
+  * equal-memory slot capacity — at the dense layout's KV byte budget,
+    the paged engine must sustain strictly more concurrent slots (short
+    requests reserve only the pages they can touch, not cache_len);
+  * chunked-prefill tick jitter — on a long+short prompt mix, chunked
+    prefill (bounded cache-append calls, scheduling point between
+    chunks) must cut the p99 decode-tick interval vs unchunked
+    (sync_ticks=True so intervals measure real compute cadence).
 
   python -m benchmarks.serve [--loads 32,256] [--requests 32] [--slots 4]
                              [--prompt-len 16] [--gen 16] [--cores 4]
+                             [--page-size 0=auto] [--smoke]
 """
 from __future__ import annotations
 
@@ -46,9 +53,11 @@ import jax.numpy as jnp
 from repro.configs import get
 from repro.launch.serve import _cache_len, _prompts
 from repro.models.lm import init_params
-from repro.serve import Request, RequestQueue, ServeEngine, make_jit_steps
+from repro.serve import (Request, RequestQueue, ServeEngine, auto_page_size,
+                         make_jit_steps)
 from repro.serve.engine import percentile
-from repro.steps import greedy_oneshot, make_serve_step
+from repro.steps import (chunkable, greedy_oneshot, make_prefill_step,
+                         make_serve_step)
 
 
 @dataclass
@@ -62,11 +71,23 @@ class ServeResult:
     occupancy: float
     p50_s: float
     p99_s: float
+    pages_peak: int | None = None
+    pages_capacity: int | None = None
+    max_live: int = 0
+    prefill_calls: int = 0
+    p99_tick_ms: float | None = None
 
     def row(self) -> str:
+        extra = ""
+        if self.pages_peak is not None:
+            extra = f",pages={self.pages_peak}/{self.pages_capacity}"
+        if self.p99_tick_ms is not None:
+            extra += f",p99_tick={self.p99_tick_ms:.1f}ms"
         return (f"{self.name},load={self.load:g},req={self.requests},"
                 f"tokens_s={self.tokens_s:.0f},occ={self.occupancy:.2f},"
-                f"p50={self.p50_s * 1e3:.0f}ms,p99={self.p99_s * 1e3:.0f}ms")
+                f"p50={self.p50_s * 1e3:.0f}ms,p99={self.p99_s * 1e3:.0f}ms"
+                f",max_live={self.max_live},pf_calls={self.prefill_calls}"
+                f"{extra}")
 
 
 def _pct(xs, q):
@@ -90,10 +111,15 @@ def _feed(submit, close, reqs, gaps):
 
 
 def run_engine(cfg, params, steps, prompts, gaps, *, gens, slots, cache_len,
-               umt, cores, patches=None) -> tuple[ServeResult, list]:
+               umt, cores, patches=None, name=None, page_size="auto",
+               num_pages=None, prefill_chunk=None,
+               sync_ticks=False) -> tuple[ServeResult, list]:
     reqs = _mk_requests(prompts, patches, gens)
     with ServeEngine(cfg, params, slots=slots, cache_len=cache_len,
-                     umt=umt, n_cores=cores, jit_steps=steps) as eng:
+                     umt=umt, n_cores=cores, jit_steps=steps,
+                     page_size=page_size, num_pages=num_pages,
+                     prefill_chunk=prefill_chunk,
+                     sync_ticks=sync_ticks) as eng:
         # timed region matches run_oneshot: first arrival -> drain (engine
         # construction/teardown excluded, like the oneshot jits are)
         t0 = time.monotonic()
@@ -104,11 +130,41 @@ def run_engine(cfg, params, steps, prompts, gaps, *, gens, slots, cache_len,
     toks = [np.asarray(r.out_tokens, np.int32) for r in reqs]
     lats = [r.latency for r in reqs]
     res = ServeResult(
-        name=f"serve_engine_{'umt' if umt else 'base'}",
+        name=name or f"serve_engine_{'umt' if umt else 'base'}",
         load=0.0, requests=len(reqs), slots=slots, wall_s=wall,
         tokens_s=st["tokens_out"] / wall, occupancy=st["occupancy"],
-        p50_s=_pct(lats, 0.50), p99_s=_pct(lats, 0.99))
+        p50_s=_pct(lats, 0.50), p99_s=_pct(lats, 0.99),
+        pages_peak=st.get("pages_used_peak"),
+        pages_capacity=st.get("pages_capacity"),
+        max_live=st["max_live_slots"], prefill_calls=st["prefill_calls"],
+        p99_tick_ms=(st["p99_tick_s"] * 1e3
+                     if st["p99_tick_s"] is not None else None))
     return res, toks
+
+
+def warm_engine_shapes(cfg, params, steps, prompts, patches, *, slots,
+                       cache_len, cores, prefill_chunk=None):
+    """Compile every jit shape a timed leg can hit: the engine buckets
+    batched-prefill rounds to powers of two, so drive one pre-queued
+    burst per bucket size (a burst queued before start coalesces into a
+    single round of exactly that size) — without this, a timed leg pays
+    a mid-run XLA compile the first time a new bucket shows up and every
+    queued request behind it eats the stall."""
+    sizes = sorted({min(1 << i, slots)
+                    for i in range((max(slots - 1, 1)).bit_length() + 1)})
+    for b in sizes:
+        reqs = [Request(i, prompts[i],
+                        patches=None if patches is None else patches[i],
+                        max_new_tokens=2) for i in range(b)]
+        eng = ServeEngine(cfg, params, slots=slots, cache_len=cache_len,
+                          umt=True, n_cores=cores, jit_steps=steps,
+                          page_size=steps["page_size"],
+                          prefill_chunk=prefill_chunk)
+        for r in reqs:
+            eng.submit(r)
+        with eng:
+            eng.close()
+            eng.join()
 
 
 def run_oneshot(cfg, params, prefill, serve_step, prompts, gaps, *, gens,
@@ -158,6 +214,150 @@ def run_oneshot(cfg, params, prefill, serve_step, prompts, gaps, *, gens,
     return res, toks
 
 
+def bench_equal_memory_slots(cfg, params, prefill, serve_step, *, slots,
+                             cache_len, page_size, prompt_len, gen, cores,
+                             n_req) -> ServeResult:
+    """At the dense layout's KV token budget (slots * cache_len), run the
+    paged engine with a doubled slot pool and short requests: because
+    each request reserves only ceil((prompt+gen-1)/page_size) pages
+    instead of a full cache_len row, strictly more slots fit — the seed's
+    dense cache cannot exceed ``slots`` concurrent requests at this
+    memory no matter what arrives."""
+    prompts, patches = _prompts(cfg, n_req, prompt_len, seed=5)
+    prompts = np.asarray(prompts)
+    patches = None if patches is None else np.asarray(patches)
+    gens = np.full(n_req, gen)
+    ref = np.asarray(greedy_oneshot(
+        prefill, serve_step, params, jnp.asarray(prompts),
+        None if patches is None else jnp.asarray(patches), gen))
+    budget_pages = slots * cache_len // page_size      # dense-equivalent
+    steps = make_jit_steps(cfg, cache_len=cache_len, page_size=page_size)
+    res, toks = run_engine(
+        cfg, params, steps, prompts, np.zeros(n_req), gens=gens,
+        slots=2 * slots, cache_len=cache_len, umt=True, cores=cores,
+        patches=patches, name="serve_paged_equal_mem",
+        num_pages=budget_pages + 1)
+    for i, t in enumerate(toks):
+        assert np.array_equal(t, ref[i, :len(t)]), (
+            f"equal-mem token mismatch @ request {i}")
+    ok = res.max_live > slots
+    print(res.row(), flush=True)
+    print(f"  -> equal KV memory ({budget_pages} pages x {page_size} tok "
+          f"= dense {slots} slots): paged sustained max_live="
+          f"{res.max_live} slots — "
+          f"{'PASS (strictly more than dense)' if ok else 'FAIL'}",
+          flush=True)
+    return res
+
+
+def bench_chunked_tick_jitter(cfg, params, *, prompt_len, long_factor, gen,
+                              slots, cores, n_req, page_size, seed,
+                              repeats=3) -> list[ServeResult]:
+    """Sarathi scenario: a decode-resident batch keeps ticking while a
+    coalesced burst of long prompts prefills (sync_ticks so intervals
+    measure compute cadence).  Unchunked, each long round is one
+    monopolising device computation that queued ticks wait out; chunked,
+    every chunk completes (and hits a scheduling point) before the next
+    dispatch, so ticks interleave at chunk granularity.
+
+    This container's scheduling noise puts 40-100 ms spikes on even a
+    bare single-threaded jit loop (reported below as the noise floor), so
+    legs run interleaved `repeats` times and the PASS line compares the
+    per-leg *median* of the run p99s."""
+    import gc
+
+    plen_long = prompt_len * long_factor
+    cache_len = _cache_len(cfg, plen_long, gen)
+    ps = page_size if cache_len % page_size == 0 else \
+        auto_page_size(cache_len)
+    res_gen = min(cache_len - prompt_len, 6 * gen)  # residents tick long
+    n_burst = max(2 * slots, min(n_req, 8))
+    short, _ = _prompts(cfg, slots, prompt_len, seed=3)
+    longp, _ = _prompts(cfg, n_burst, plen_long, seed=4)
+    short, longp = np.asarray(short), np.asarray(longp)
+
+    prefill = jax.jit(make_prefill_step(cfg, cache_len=cache_len))
+    serve_step = jax.jit(make_serve_step(cfg))
+    ref_s = np.asarray(greedy_oneshot(prefill, serve_step, params,
+                                      jnp.asarray(short), None, res_gen))
+    ref_l = np.asarray(greedy_oneshot(prefill, serve_step, params,
+                                      jnp.asarray(longp), None, gen))
+    steps = make_jit_steps(cfg, cache_len=cache_len, page_size=ps,
+                           chunk=True)
+    chunk_size = max(4, plen_long // 8)
+    for chunk in (None, chunk_size):
+        for pr in (short, longp):      # warm both prompt shapes' buckets
+            warm_engine_shapes(cfg, params, steps, pr, None, slots=slots,
+                               cache_len=cache_len, cores=cores,
+                               prefill_chunk=chunk)
+
+    def leg(chunk):
+        res = [Request(i, short[i], max_new_tokens=res_gen)
+               for i in range(slots)]
+        burst = [Request(100 + i, longp[i], max_new_tokens=gen)
+                 for i in range(n_burst)]
+        gc.disable()
+        try:
+            with ServeEngine(cfg, params, slots=slots, cache_len=cache_len,
+                             umt=True, n_cores=cores, jit_steps=steps,
+                             page_size=ps, prefill_chunk=chunk,
+                             sync_ticks=True) as eng:
+                t0 = time.monotonic()
+                for r in res:
+                    eng.submit(r)
+                time.sleep(0.1)        # residents inserted and ticking
+                for r in burst:
+                    eng.submit(r)      # coalesced long-prefill rounds
+                eng.close()
+                eng.join()
+                wall = time.monotonic() - t0
+                st = eng.stats()
+        finally:
+            gc.enable()
+        for i, r in enumerate(res):
+            assert np.array_equal(np.asarray(r.out_tokens, np.int32),
+                                  ref_s[i]), f"resident {i} mismatch"
+        for i, r in enumerate(burst):
+            assert np.array_equal(np.asarray(r.out_tokens, np.int32),
+                                  ref_l[i]), f"burst {i} mismatch"
+        return st, wall
+
+    stats = {None: [], chunk_size: []}
+    for _ in range(repeats):
+        for chunk in (None, chunk_size):     # interleaved A/B
+            stats[chunk].append(leg(chunk))
+    out = []
+    meds = {}
+    for chunk, runs in stats.items():
+        p99s = sorted(1e3 * s["p99_tick_s"] for s, _ in runs)
+        p50s = sorted(1e3 * s["p50_tick_s"] for s, _ in runs)
+        meds[chunk] = p99s[len(p99s) // 2]
+        s, wall = runs[-1]
+        r = ServeResult(
+            name=f"serve_{'chunked' if chunk else 'unchunked'}_longmix",
+            load=0.0, requests=slots + n_burst, slots=slots, wall_s=wall,
+            tokens_s=s["tokens_out"] / wall, occupancy=s["occupancy"],
+            p50_s=0.0, p99_s=0.0, pages_peak=s.get("pages_used_peak"),
+            pages_capacity=s.get("pages_capacity"),
+            max_live=s["max_live_slots"], prefill_calls=s["prefill_calls"],
+            p99_tick_ms=meds[chunk])
+        out.append(r)
+        print(f"{r.name}: median p50_tick={p50s[len(p50s) // 2]:.1f}ms "
+              f"median p99_tick={meds[chunk]:.1f}ms over {len(runs)} runs "
+              f"(chunks/run={s['prefill_chunks']})", flush=True)
+    ok = meds[chunk_size] < meds[None]
+    verdict = "PASS (chunking cuts p99 tick jitter)" if ok else "FAIL"
+    if not ok and plen_long < 256:
+        verdict += (" — expected at this scale: a "
+                    f"{plen_long}-token prefill is too short to "
+                    "monopolise anything, chunking is pure overhead "
+                    "(use --long-factor 32)")
+    print(f"  -> long-prompt burst p99 tick (median of {repeats}): "
+          f"unchunked {meds[None]:.1f}ms vs chunked "
+          f"{meds[chunk_size]:.1f}ms — {verdict}", flush=True)
+    return out
+
+
 def main(argv=None) -> list[ServeResult]:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-14b")
@@ -173,14 +373,35 @@ def main(argv=None) -> list[ServeResult]:
                     help="all requests generate exactly --gen tokens")
     ap.add_argument("--cores", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="KV page size (0 = largest divisor of cache_len "
+                         "<= 8)")
+    ap.add_argument("--long-factor", type=int, default=32,
+                    help="jitter phase: long prompts are this multiple "
+                         "of --prompt-len (long enough that one "
+                         "unchunked prefill visibly monopolises)")
+    ap.add_argument("--skip-phases", action="store_true",
+                    help="load sweep only (skip equal-mem and jitter "
+                         "phases)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny everything: CI smoke config that still "
+                         "executes every phase")
     args = ap.parse_args(argv)
+    if args.smoke:
+        args.loads, args.requests, args.slots = "64", 8, 2
+        # 3 cores: the baseline (umt=False) leg needs intake + decode +
+        # prefill workers
+        args.prompt_len, args.gen, args.cores = 8, 4, 3
+        args.long_factor = 8
     loads = [float(x) for x in args.loads.split(",")]
 
     cfg = get(args.arch).tiny()
     params = init_params(cfg, jax.random.PRNGKey(0))
     cache_len = _cache_len(cfg, args.prompt_len, args.gen)
-    steps = make_jit_steps(cfg, cache_len=cache_len)
-    prefill = steps[0]
+    page_size = args.page_size or auto_page_size(cache_len)
+    steps = make_jit_steps(cfg, cache_len=cache_len, page_size=page_size)
+    steps_dense = make_jit_steps(cfg, cache_len=cache_len, page_size=None)
+    prefill = steps["prefill"]
     serve_step = jax.jit(make_serve_step(cfg))
     # frontend-correct shapes (audio codebook dim, vision patches)
     prompts, patches = _prompts(cfg, args.requests, args.prompt_len)
@@ -191,27 +412,36 @@ def main(argv=None) -> list[ServeResult]:
             rng.integers(max(1, args.gen // 4), args.gen + 1,
                          args.requests))
 
-    # warm every shape (oneshot batch prefill + serve step, and — via a
-    # throwaway engine leg — the engine's batch=1 prefill, insert, masked
-    # decode and its small eager ops) so no timed leg pays XLA compile
+    # warm every shape (oneshot batch prefill + serve step, and — via
+    # throwaway engine legs — the engine's bucketed batched prefills,
+    # paged/dense insert + masked decode and the small eager ops) so no
+    # timed leg pays XLA compile
     wp = None if patches is None else jnp.asarray(patches[:args.slots])
     cache, logits = prefill(params, jnp.asarray(prompts[:args.slots]), wp)
     serve_step(params, cache, jnp.argmax(logits, -1).astype(jnp.int32))
-    run_engine(cfg, params, steps, prompts[:2 * args.slots],
-               np.zeros(2 * args.slots), gens=gens, slots=args.slots,
-               cache_len=cache_len, umt=True, cores=args.cores,
-               patches=patches)
+    for st in (steps, steps_dense):
+        warm_engine_shapes(cfg, params, st, prompts, patches,
+                           slots=args.slots, cache_len=cache_len,
+                           cores=args.cores)
 
     results: list[ServeResult] = []
+    burst_ratio = None
     for load in loads:
         gaps = np.random.default_rng(args.seed).exponential(
             1.0 / load, args.requests)
         runs = {}
-        for umt in (True, False):
+        legs = [("serve_engine_umt", dict(umt=True, steps=steps,
+                                          page_size=page_size)),
+                ("serve_engine_base", dict(umt=False, steps=steps,
+                                           page_size=page_size)),
+                ("serve_engine_dense", dict(umt=True, steps=steps_dense,
+                                            page_size=None))]
+        for name, kw in legs:
             res, toks = run_engine(
-                cfg, params, steps, prompts, gaps, gens=gens,
-                slots=args.slots, cache_len=cache_len, umt=umt,
-                cores=args.cores, patches=patches)
+                cfg, params, kw["steps"], prompts, gaps, gens=gens,
+                slots=args.slots, cache_len=cache_len, umt=kw["umt"],
+                cores=args.cores, patches=patches, name=name,
+                page_size=kw["page_size"])
             res.load = load
             runs[res.name] = (res, toks)
             results.append(res)
@@ -233,11 +463,41 @@ def main(argv=None) -> list[ServeResult]:
                     f"@ load {load}, request {i}")
         eng, base = runs["serve_engine_umt"][0], runs["serve_oneshot"][0]
         ub = runs["serve_engine_base"][0]
+        dn = runs["serve_engine_dense"][0]
+        burst_ratio = eng.tokens_s / base.tokens_s
         print(f"  -> load={load:g}: engine/oneshot tokens_s = "
-              f"{eng.tokens_s / base.tokens_s:.2f}x, "
+              f"{burst_ratio:.2f}x, "
               f"p99 {eng.p99_s * 1e3:.0f}ms vs {base.p99_s * 1e3:.0f}ms; "
-              f"umt/base tokens_s = {eng.tokens_s / ub.tokens_s:.2f}x",
+              f"umt/base = {eng.tokens_s / ub.tokens_s:.2f}x; "
+              f"paged/dense = {eng.tokens_s / dn.tokens_s:.2f}x",
               flush=True)
+    if burst_ratio is not None:
+        ok = burst_ratio >= 1 / 1.2
+        print(f"  -> burst check (load={loads[-1]:g}): batched prefill at "
+              f"{burst_ratio:.2f}x of one-shot tokens/s — "
+              f"{'PASS (within 1.2x)' if ok else 'FAIL (worse than 1.2x)'}",
+              flush=True)
+
+    if not args.skip_phases:
+        # phase: strictly more concurrent slots at equal KV memory
+        results.append(bench_equal_memory_slots(
+            cfg, params, prefill, serve_step, slots=args.slots,
+            cache_len=cache_len, page_size=page_size,
+            prompt_len=max(2, args.prompt_len // 2),
+            gen=max(2, args.gen // 4), cores=args.cores,
+            n_req=args.requests))
+
+        # phase: chunked prefill bounds decode-tick jitter (chunk-exact,
+        # token-only frontends: the mix builder has no patch plumbing)
+        if cfg.frontend != "vision_patches" and chunkable(
+                cfg, _cache_len(cfg, args.prompt_len * args.long_factor,
+                                args.gen)):
+            results.extend(bench_chunked_tick_jitter(
+                cfg, params, prompt_len=args.prompt_len,
+                long_factor=args.long_factor, gen=args.gen,
+                slots=args.slots, cores=args.cores,
+                n_req=args.requests, page_size=page_size,
+                seed=args.seed))
     return results
 
 

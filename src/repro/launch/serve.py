@@ -81,10 +81,15 @@ def serve_engine(cfg, params, mesh, args):
     prompts, patches = _prompts(cfg, args.requests, args.prompt_len)
     prompts = np.asarray(prompts)
 
+    page_size = ("auto" if args.page_size == 0
+                 else None if args.page_size < 0 else args.page_size)
     t0 = time.time()
     with ServeEngine(cfg, params, slots=args.batch, cache_len=cache_len,
-                     mesh=mesh, umt=not args.no_umt,
-                     n_cores=args.cores) as eng:
+                     mesh=mesh, umt=not args.no_umt, n_cores=args.cores,
+                     page_size=page_size,
+                     num_pages=args.pages if args.pages > 0 else None,
+                     prefill_chunk=args.chunk if args.chunk > 0
+                     else None) as eng:
         reqs = []
         for i in range(args.requests):
             reqs.append(Request(
@@ -105,6 +110,10 @@ def serve_engine(cfg, params, mesh, args):
         "mode": "engine",
         "arch": cfg.name,
         "umt": not args.no_umt,
+        "page_size": stats["page_size"],
+        "pages_used_peak": stats.get("pages_used_peak"),
+        "prefill_calls": stats["prefill_calls"],
+        "prefill_chunks": stats["prefill_chunks"],
         "wall_s": round(wall, 3),
         "tokens_s": round(stats["tokens_out"] / wall, 1),
         "occupancy": round(stats["occupancy"], 3),
@@ -134,6 +143,15 @@ def serve(argv=None):
                     help="engine: baseline runtime (blocked = idle core)")
     ap.add_argument("--cores", type=int, default=None,
                     help="engine: runtime core count")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="engine: KV page size (0 = auto, <0 = dense "
+                         "per-slot cache, no paging)")
+    ap.add_argument("--pages", type=int, default=0,
+                    help="engine: KV page-pool size incl. garbage page "
+                         "(0 = dense-equivalent capacity)")
+    ap.add_argument("--chunk", type=int, default=0,
+                    help="engine: chunked prefill — prompts longer than "
+                         "this prefill as cache-append chunks (0 = off)")
     args = ap.parse_args(argv)
     if args.requests <= 0:
         args.requests = args.batch

@@ -18,9 +18,23 @@ import jax
 import jax.numpy as jnp
 
 from ..sharding import shard
-from .layers import apply_rope, rms_norm
+from .layers import apply_rope, page_gather, page_scatter, rms_norm
 
 NEG_INF = -1e30
+
+
+def paged_leaf(pages, window, cache_len=None):
+    """Static predicate: is this attention cache leaf a paged pool?
+
+    Only *linear* caches are paged — ``window is None``, or the SWA ring
+    degenerated to linear because ``window >= cache_len`` (slot == pos, no
+    wraparound).  A true ring (window < cache_len) is already bounded, so
+    it stays a dense per-slot row.  ``pages`` carries ``cache_len`` so the
+    check stays static at trace time."""
+    if pages is None:
+        return False
+    cl = pages["cache_len"] if cache_len is None else cache_len
+    return window is None or window >= cl
 
 
 import functools
@@ -211,8 +225,16 @@ def _pad_seq(t, target):
     return jnp.pad(t, pad)
 
 
-def gqa_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None):
-    """x: (B,S,D) -> (out, new_cache or None). cache: {"k","v"} unexpanded."""
+def gqa_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None,
+              pages=None, attn_extent=None):
+    """x: (B,S,D) -> (out, new_cache or None). cache: {"k","v"} unexpanded.
+
+    With ``pages`` (decode only) the linear K/V leaves are paged pools
+    (P, page_size, Hkv, Dh): the new token's K/V is scattered through the
+    block table and attention runs over a gathered slot-major dense view
+    — bit-identical to the unpaged cache, since every valid (masked-in)
+    position gathers the very value the dense cache would hold.
+    """
     b, s, _ = x.shape
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     dt = x.dtype
@@ -237,12 +259,24 @@ def gqa_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None):
             k = apply_rope(k, rp, cfg.rope_theta)
         kc, vc = cache["k"], cache["v"]
         w = spec.window
-        idx = jnp.mod(pos, kc.shape[1]) if w is not None else pos
-        kc = _cache_update(kc, k, idx)
-        vc = _cache_update(vc, v, idx)
-        kc = shard(kc, "batch", "seq_shard", None, None)
-        vc = shard(vc, "batch", "seq_shard", None, None)
-        out = decode_attention(q, kc, vc, pos, window=w)
+        if paged_leaf(pages, w):
+            # linear logical index (ring degenerate: no wraparound), so
+            # the scatter goes straight through the block table
+            table, ps = pages["table"], pages["page_size"]
+            kc = page_scatter(kc, table, ps, pos, k)
+            vc = page_scatter(vc, table, ps, pos, v)
+            kd = shard(page_gather(kc, table, ps),
+                       "batch", "seq_shard", None, None)
+            vd = shard(page_gather(vc, table, ps),
+                       "batch", "seq_shard", None, None)
+        else:
+            idx = jnp.mod(pos, kc.shape[1]) if w is not None else pos
+            kc = _cache_update(kc, k, idx)
+            vc = _cache_update(vc, v, idx)
+            kc = shard(kc, "batch", "seq_shard", None, None)
+            vc = shard(vc, "batch", "seq_shard", None, None)
+            kd, vd = kc, vc
+        out = decode_attention(q, kd, vd, pos, window=w)
         new_cache = {"k": kc, "v": vc}
     else:
         q = shard(q, "batch", "seq", "heads", "head_dim")
@@ -250,7 +284,28 @@ def gqa_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None):
         if cfg.pos_emb == "rope":
             q = apply_rope(q, positions, cfg.rope_theta)
             k = apply_rope(k, positions, cfg.rope_theta)
-        if mode == "prefill":
+        if mode == "prefill_chunk":
+            # cache-append chunk (Sarathi-style): write this chunk's K/V
+            # into the dense row cache at [pos, pos+s), then attend the
+            # chunk's queries over the full cache extent, causally masked
+            # at pos+i.  Masked lanes contribute exact zeros, so rows are
+            # bit-identical to the one-shot prefill (the padded key
+            # extent cannot perturb them); needs a linear cache — the
+            # pattern is validated by make_prefill_chunk_step.
+            kc, vc = cache["k"], cache["v"]
+            start = (0, pos) + (0,) * (kc.ndim - 2)
+            kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), start)
+            vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), start)
+            kc = shard(kc, "batch", "seq_shard", None, None)
+            vc = shard(vc, "batch", "seq_shard", None, None)
+            # static extent bucket: attend only the prefix that can hold
+            # valid keys — any extent >= pos+s is bit-exact, and a
+            # per-chunk bucket keeps chunked-prefill FLOPs at the
+            # one-shot level instead of cache_len per chunk
+            ext = kc.shape[1] if attn_extent is None else attn_extent
+            out = full_attention(q, kc[:, :ext], vc[:, :ext], q_off=pos)
+            new_cache = {"k": kc, "v": vc}
+        elif mode == "prefill":
             out = qchunk_attention(q, k, v, window=spec.window)
             w = spec.window
             if w is not None:
@@ -313,7 +368,8 @@ def _mla_q(xn, p, cfg, dt):
     return q[..., :dn], q[..., dn:]          # q_nope, q_rope
 
 
-def mla_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None):
+def mla_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None,
+              pages=None, attn_extent=None):
     b, s, _ = x.shape
     h = cfg.n_heads
     rkv, dn, dr, dv = (cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim,
@@ -335,24 +391,66 @@ def mla_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None):
         k_rope = apply_rope(k_rope[:, :, None, :], rp,
                             cfg.rope_theta)[:, :, 0, :]
         cc, kr = cache["ckv"], cache["krope"]
-        cc = _cache_update(cc, ckv, pos)
-        kr = _cache_update(kr, k_rope, pos)
-        cc = shard(cc, "batch", "seq_shard", None)
-        kr = shard(kr, "batch", "seq_shard", None)
+        if paged_leaf(pages, None):
+            table, ps = pages["table"], pages["page_size"]
+            cc = page_scatter(cc, table, ps, pos, ckv)
+            kr = page_scatter(kr, table, ps, pos, k_rope)
+            cd = shard(page_gather(cc, table, ps),
+                       "batch", "seq_shard", None)
+            kd = shard(page_gather(kr, table, ps),
+                       "batch", "seq_shard", None)
+        else:
+            cc = _cache_update(cc, ckv, pos)
+            kr = _cache_update(kr, k_rope, pos)
+            cc = shard(cc, "batch", "seq_shard", None)
+            kr = shard(kr, "batch", "seq_shard", None)
+            cd, kd = cc, kr
         wk_b = p["wk_b"].astype(dt).reshape(rkv, h, dn)
         # absorb q_nope through wk_b:  (B,1,H,rkv)
         q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, wk_b)
-        scores = (jnp.einsum("bshr,btr->bhst", q_lat, cc) +
-                  jnp.einsum("bshr,btr->bhst", q_rope, kr))
+        scores = (jnp.einsum("bshr,btr->bhst", q_lat, cd) +
+                  jnp.einsum("bshr,btr->bhst", q_rope, kd))
         scores = scores.astype(jnp.float32) * scale
-        valid = jnp.arange(cc.shape[1]) <= rp              # (B,T) | (T,)
+        valid = jnp.arange(cd.shape[1]) <= rp              # (B,T) | (T,)
         mb = jnp.where(valid, 0.0, NEG_INF)
         scores = scores + (mb[:, None, None, :] if per_slot
                            else mb[None, None, None, :])
         probs = jax.nn.softmax(scores, axis=-1).astype(dt)
-        lat = jnp.einsum("bhst,btr->bshr", probs, cc)          # (B,1,H,rkv)
+        lat = jnp.einsum("bhst,btr->bshr", probs, cd)          # (B,1,H,rkv)
         out = jnp.einsum("bshr,rhv->bshv", lat,
                          p["wv_b"].astype(dt).reshape(rkv, h, dv))
+        new_cache = {"ckv": cc, "krope": kr}
+    elif mode == "prefill_chunk":
+        # cache-append chunk: write this chunk's latent into the dense row
+        # cache, then run the one-shot prefill form (non-absorbed) with
+        # K/V reconstructed from the *full* cached latent — row-wise
+        # identical to computing them from the chunk activations, and the
+        # padded key extent is causally masked to exact zeros.
+        positions = pos + jnp.arange(s)
+        q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+        k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                            cfg.rope_theta)[:, :, 0, :]
+        cc, kr = cache["ckv"], cache["krope"]
+        cc = jax.lax.dynamic_update_slice(cc, ckv.astype(cc.dtype),
+                                          (0, pos, 0))
+        kr = jax.lax.dynamic_update_slice(kr, k_rope.astype(kr.dtype),
+                                          (0, pos, 0))
+        cc = shard(cc, "batch", "seq_shard", None)
+        kr = shard(kr, "batch", "seq_shard", None)
+        # static extent bucket (see gqa chunk branch): reconstruct and
+        # attend only the key prefix that can be valid
+        sk = cc.shape[1] if attn_extent is None else attn_extent
+        k_nope = jnp.einsum("bsr,rhk->bshk", cc[:, :sk].astype(dt),
+                            p["wk_b"].astype(dt).reshape(rkv, h, dn))
+        vfull = jnp.einsum("bsr,rhk->bshk", cc[:, :sk].astype(dt),
+                           p["wv_b"].astype(dt).reshape(rkv, h, dv))
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr[:, :sk].astype(dt)[:, :, None, :],
+                                      (b, sk, h, dr))], axis=-1)
+        q = shard(q, "batch", "seq", "heads", "head_dim")
+        k = shard(k, "batch", "seq", "heads", "head_dim")
+        out = full_attention(q, k, vfull, q_off=pos, scale=scale)
         new_cache = {"ckv": cc, "krope": kr}
     else:
         positions = pos + jnp.arange(s)

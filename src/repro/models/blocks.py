@@ -44,11 +44,13 @@ def block_cache_shapes(cfg, spec, batch, seq):
     return cache_fn(cfg, spec, batch, seq)
 
 
-def block_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None):
+def block_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None,
+                pages=None, attn_extent=None):
     """Returns (x, new_cache, aux_loss)."""
     _, _, apply_fn = _mixer(spec)
     out, new_cache = apply_fn(x, p["mixer"], cfg, spec, mode=mode, pos=pos,
-                              cache=cache, cache_len=cache_len)
+                              cache=cache, cache_len=cache_len, pages=pages,
+                              attn_extent=attn_extent)
     x = x + out
     aux = jnp.zeros((), jnp.float32)
     if spec.mlp != "none":

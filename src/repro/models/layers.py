@@ -21,6 +21,36 @@ def gated_rms_norm(x, z, w, eps=1e-5):
                     w, eps)
 
 
+# ------------------------------------------------------------------- paging
+def page_gather(pool, table, page_size):
+    """Materialise a slot-major dense view of a paged KV pool.
+
+    pool: (P, page_size, ...) physical pages; table: (B, pages_per_slot)
+    int32 physical page ids (page 0 is the reserved garbage page, so
+    unallocated logical pages gather zeros-or-garbage that the position
+    mask must cover).  Returns (B, pages_per_slot * page_size, ...) — the
+    same dense layout a per-slot cache row would have, so the attention
+    math downstream is untouched (and bit-identical) relative to the
+    unpaged cache."""
+    b, pps = table.shape
+    gathered = pool[table]                     # (B, pps, page_size, ...)
+    return gathered.reshape((b, pps * page_size) + pool.shape[2:])
+
+
+def page_scatter(pool, table, page_size, idx, update):
+    """Write one token row per slot into the paged pool.
+
+    idx: (B,) per-slot logical positions; update: (B, 1, ...) decode-step
+    values.  The logical position maps through the slot's block table to
+    (physical page, offset).  Slots whose table entry is the garbage page
+    (dead slots, frozen ``idx``) all collide on page 0 — harmless, it is
+    never gathered into a valid (masked-in) position."""
+    page = jnp.take_along_axis(table, (idx // page_size)[:, None],
+                               axis=1)[:, 0]                     # (B,)
+    return pool.at[page, idx % page_size].set(
+        update[:, 0].astype(pool.dtype))
+
+
 # ----------------------------------------------------------------- positions
 def rope_freqs(dim: int, theta: float):
     return 1.0 / (theta ** (np.arange(0, dim, 2, dtype=np.float32) / dim))

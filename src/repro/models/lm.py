@@ -132,18 +132,37 @@ def init_cache(cfg, batch: int, seq: int, dtype):
 
 # ---------------------------------------------------------------- forward
 def forward(params, cfg, tokens, *, mode="train", pos=0, cache=None,
-            patches=None, cache_len=None):
+            patches=None, cache_len=None, pages=None, attn_extent=None,
+            want_logits=True):
     """tokens: (B,S[,K]) int32. Returns {"logits","cache","aux"}.
 
     mode: "train" (full logits) | "prefill" (cache + last logits) |
     "decode" (S==1, cache updated at ``pos`` — a scalar, or a (B,) vector
     of per-slot positions for continuous batching, where every batch row
-    decodes at its own depth).
+    decodes at its own depth) | "prefill_chunk" (cache-append prefill
+    continuation: S chunk tokens written at [pos, pos+S) of an existing
+    dense prefill cache — last-position logits, like "prefill").
+
+    pages: optional paged-KV descriptor for decode —
+    ``{"table": (B, pages_per_slot) int32, "page_size": int,
+    "cache_len": int}``.  Linear attention cache leaves are then paged
+    pools (see repro.models.layers.page_gather); bounded leaves (SWA
+    rings, SSM state) stay dense per-slot rows.
+
+    attn_extent (prefill_chunk only): static key extent — attention reads
+    only the first ``attn_extent`` cache positions (must cover
+    pos + S).  Bit-exact for any extent (masked lanes are exact zeros);
+    without it each chunk pays the full cache_len extent.  want_logits
+    (prefill_chunk only): False skips the LM head for non-final chunks.
     """
     dt = jnp.dtype(cfg.dtype)
     x = embed_tokens(tokens, params["embed"], cfg, dt)
-    if cfg.frontend == "vision_patches" and mode != "decode":
+    if cfg.frontend == "vision_patches" and mode in ("train", "prefill"):
         assert patches is not None
+        x = jnp.concatenate([patches.astype(dt), x], axis=1)
+    elif mode == "prefill_chunk" and patches is not None:
+        # vision chunked prefill: the patch prefix rides on the first
+        # chunk only (later chunks continue at pos past the patches)
         x = jnp.concatenate([patches.astype(dt), x], axis=1)
     b, s, _ = x.shape
     positions = pos + jnp.arange(s) if mode != "decode" else pos
@@ -157,16 +176,18 @@ def forward(params, cfg, tokens, *, mode="train", pos=0, cache=None,
     x = shard(x, "batch", "seq", "embed")
 
     with_cache = mode != "train"
+    cache_in = mode in ("decode", "prefill_chunk")
     cache_blocks = cache["blocks"] if cache is not None else None
 
     def body(carry, xs):
         x, aux = carry
         bp = xs[0]
-        bc = xs[1] if mode == "decode" else (None,) * len(cfg.pattern)
+        bc = xs[1] if cache_in else (None,) * len(cfg.pattern)
         new_cs = []
         for i, spec in enumerate(cfg.pattern):
             x, nc, a = block_apply(x, bp[i], cfg, spec, mode=mode, pos=pos,
-                                   cache=bc[i], cache_len=cache_len)
+                                   cache=bc[i], cache_len=cache_len,
+                                   pages=pages, attn_extent=attn_extent)
             new_cs.append(nc)
             aux = aux + a
         ys = tuple(new_cs) if with_cache else ()
@@ -179,21 +200,27 @@ def forward(params, cfg, tokens, *, mode="train", pos=0, cache=None,
         body = jax.checkpoint(
             body, policy=jax.checkpoint_policies.checkpoint_dots)
 
-    xs = (params["blocks"],) if mode != "decode" \
-        else (params["blocks"], cache_blocks)
+    xs = (params["blocks"], cache_blocks) if cache_in \
+        else (params["blocks"],)
     (x, aux), new_blocks = jax.lax.scan(body, (x, jnp.zeros((),
                                                             jnp.float32)), xs)
 
     new_cache = None
     if with_cache:
-        new_pos = (cache["pos"] + 1) if mode == "decode" \
-            else jnp.asarray(s, jnp.int32)
+        if mode == "decode":
+            new_pos = cache["pos"] + 1
+        elif mode == "prefill_chunk":
+            new_pos = jnp.asarray(pos + s, jnp.int32)
+        else:
+            new_pos = jnp.asarray(s, jnp.int32)
         new_cache = {"pos": new_pos, "blocks": new_blocks}
 
     if mode == "train" and cfg.frontend == "vision_patches":
         x = x[:, cfg.n_patches:]
-    if mode == "prefill":
+    if mode in ("prefill", "prefill_chunk"):
         x = x[:, -1:]
+    if not want_logits:                 # non-final chunk: cache only
+        return {"logits": None, "cache": new_cache, "aux": aux}
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = lm_logits(x, params, cfg)
     return {"logits": logits, "cache": new_cache, "aux": aux}

@@ -111,9 +111,19 @@ def ssd_chunked(xs, dt, a_coef, b_in, c_in, chunk, init_state):
     return y, h_final
 
 
-def ssm_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None):
-    """Mamba2 block mixer. x: (B,S,D) -> (out, new_cache or None)."""
-    del pos, cache_len
+def ssm_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None,
+              pages=None, attn_extent=None):
+    """Mamba2 block mixer. x: (B,S,D) -> (out, new_cache or None).
+
+    The SSM cache (conv tail + recurrent state) is O(1) per slot, so it is
+    never paged (``pages`` is ignored); chunked prefill is unsupported —
+    the chunked-SSD boundary would have to align with ``ssm_chunk`` and
+    the conv window, and the serve engine gates chunking off for SSM
+    patterns instead (see repro.steps.chunkable)."""
+    del pos, cache_len, pages, attn_extent
+    if mode == "prefill_chunk":
+        raise NotImplementedError(
+            "chunked prefill is not supported for SSM blocks")
     b, s, _ = x.shape
     h, pd, n, g = (cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state,
                    cfg.ssm_ngroups)

@@ -27,12 +27,27 @@ engine-level A/B that ``benchmarks/serve.py`` measures.
 Continuous batching
 -------------------
 A fixed pool of ``slots`` sequences shares one batched KV cache whose
-``pos`` is per-slot (``init_slot_cache``).  Finished sequences free their
-slot immediately; new prompts are prefilled batch=1 and *inserted*
-(``make_insert_step`` scatters the prefilled row into the pool) while
-decode keeps ticking over live slots (``make_decode_step``, active-slot
-masked).  Greedy outputs are bit-identical to the one-shot serve path for
-any arrival order and slot schedule (tested).
+``pos`` is per-slot.  Finished sequences free their slot immediately; new
+prompts are prefilled (coalesced per arrival round into one *batched*
+call per prompt shape, and — with ``prefill_chunk`` — split into bounded
+cache-append chunks so decode ticks interleave) and *inserted* into free
+slots while decode keeps ticking over live slots (``make_decode_step``,
+active-slot masked).  Greedy outputs are bit-identical to the one-shot
+serve path for any arrival order and slot schedule (tested).
+
+Paged KV cache
+--------------
+The linear attention cache leaves are paged (vLLM-style): physical pages
+of ``page_size`` token slots allocated from a free list
+(:class:`repro.serve.pager.PagePool`) at admission and freed the moment a
+request finishes (including early ``eos_id``/``stop`` stops), addressed
+through per-slot block tables.  KV memory is bounded by live tokens
+rather than ``slots * cache_len``, so at equal memory the pool runs
+strictly more concurrent slots than the dense layout
+(``page_size=None``, kept for A/B benchmarks).  Admission *blocks* on
+pool exhaustion — worst-case reservation makes that deadlock-free — and
+page reuse across slots can never corrupt: dead slots' tables point at
+the reserved garbage page 0.
 
 Usage
 -----
@@ -56,7 +71,9 @@ The CLI front-end is ``python -m repro.launch.serve --mode engine``
 (``--mode oneshot`` keeps the pre-engine one-shot batch path for
 comparison); the load benchmark is ``python -m benchmarks.serve``.
 """
-from .engine import ServeEngine, make_jit_steps
+from .engine import ServeEngine, auto_page_size, make_jit_steps
+from .pager import GARBAGE_PAGE, PagePool
 from .request import Request, RequestQueue
 
-__all__ = ["ServeEngine", "Request", "RequestQueue", "make_jit_steps"]
+__all__ = ["ServeEngine", "Request", "RequestQueue", "make_jit_steps",
+           "PagePool", "GARBAGE_PAGE", "auto_page_size"]

@@ -1,26 +1,42 @@
 """Continuous-batching serve engine on the UMT runtime.
 
-A fixed pool of ``slots`` serve slots shares one batched KV cache
-(``init_slot_cache``: per-slot ``pos``, every slot at its own depth).
-Finished sequences free their slot immediately; newly arrived prompts are
-prefilled (batch=1) and *inserted* into free slots while decode keeps
-running over the live slots — no global barrier, no waiting for the
-slowest sequence in a static batch.
+A fixed pool of ``slots`` serve slots shares one batched KV cache.  The
+linear attention cache leaves are **paged** (vLLM-style): physical pages
+of ``page_size`` token slots, allocated from a free-list
+(:class:`repro.serve.pager.PagePool`) at admission and freed the moment a
+request finishes — so KV memory is bounded by *live tokens*, not by
+``slots * cache_len``, and the pool can run more concurrent slots at
+equal memory than the dense layout.  Bounded cache leaves (SWA rings,
+SSM conv/state) stay dense per-slot rows.
+
+Prefill is **batched** and **chunked**:
+
+  * arrivals are coalesced per scheduling round (``RequestQueue.
+    get_batch``) and prefilled as one batched call per prompt shape
+    (batch padded to a power of two so jit shapes stay few) — closing the
+    burst-throughput gap to the one-shot path's batched prefill;
+  * with ``prefill_chunk=C`` set, long prompts prefill as cache-append
+    chunks of ``C`` tokens (Sarathi-style): each chunk is a separate,
+    bounded jit call with a scheduling point in between, so decode ticks
+    interleave instead of stalling behind one long prefill.
 
 Everything I/O- or compute-shaped runs as a UMT task on the runtime:
 
   * **intake**   — blocks on the request queue (monitored ``io.wait``);
-  * **prefill**  — one task per request, fanned out by intake;
-  * **decode**   — the driver task: insert pending prefills, run one
-    masked decode tick over the pool, collect finished slots; blocks
-    (monitored) when no slot is live;
+  * **prefill**  — one task per coalesced round, fanned out by intake;
+  * **decode**   — the driver task: admit pending prefills (blocking on
+    free pages, never corrupting), run one masked decode tick over the
+    pool, collect finished/stopped slots; blocks (monitored) when no
+    slot is live;
   * **respond**  — one task per finished request (response write through
     the monitored shim when a sink is configured);
   * **weights**  — optional checkpointed-weights load, so a core idled by
     request wait can load weights instead (paper's whole point).
 
-Correctness bar (tested): for any arrival order and slot schedule, each
-request's greedy tokens are identical to the one-shot serve path's.
+Correctness bar (tested): for any arrival order, slot schedule, page
+assignment and chunk boundaries, each request's greedy tokens are
+bit-identical to (a prefix of, under ``eos_id``/``stop``) the one-shot
+serve path's.
 """
 from __future__ import annotations
 
@@ -31,8 +47,11 @@ import time
 import numpy as np
 
 from ..core import UMTRuntime, io
-from ..steps import (init_slot_cache, make_decode_step, make_insert_step,
+from ..steps import (chunkable, init_cache, init_paged_slot_cache,
+                     init_slot_cache, make_batched_insert_step,
+                     make_decode_step, make_prefill_chunk_step,
                      make_prefill_step)
+from .pager import GARBAGE_PAGE, PagePool
 from .request import Request, RequestQueue
 
 try:  # jax is present everywhere we run; guard only for doc tooling
@@ -48,13 +67,34 @@ def percentile(xs, q):
     return xs[min(len(xs) - 1, int(len(xs) * q))] if xs else None
 
 
-def make_jit_steps(cfg, mesh=None, cache_len: int = 64):
-    """(prefill, insert, decode) jitted once — pass as ``jit_steps`` to
+def auto_page_size(cache_len: int, cap: int = 8) -> int:
+    """Largest divisor of ``cache_len`` that is <= ``cap``: big enough to
+    keep block tables small, small enough that a short request does not
+    reserve much slack past its last token."""
+    return max(d for d in range(1, min(cap, cache_len) + 1)
+               if cache_len % d == 0)
+
+
+def make_jit_steps(cfg, mesh=None, cache_len: int = 64, *,
+                   page_size: int | None = None, chunk: bool = False):
+    """The engine's jitted steps, built once — pass as ``jit_steps`` to
     several ``ServeEngine`` instances (benchmark A/B legs) so XLA compiles
-    each step a single time per process."""
-    return (jax.jit(make_prefill_step(cfg, mesh, cache_len=cache_len)),
-            jax.jit(make_insert_step(cfg, mesh)),
-            jax.jit(make_decode_step(cfg, mesh)))
+    each step a single time per process.  Returns a dict carrying the
+    cache geometry it was built for (the engine cross-checks it).
+    ``page_size=None`` builds the dense (pre-paging) steps."""
+    return {
+        "cache_len": cache_len,
+        "page_size": page_size,
+        "prefill": jax.jit(make_prefill_step(cfg, mesh,
+                                             cache_len=cache_len)),
+        "insert": jax.jit(make_batched_insert_step(
+            cfg, mesh, cache_len=cache_len, page_size=page_size)),
+        "decode": jax.jit(make_decode_step(
+            cfg, mesh, cache_len=cache_len, page_size=page_size)),
+        "chunk": (jax.jit(make_prefill_chunk_step(cfg, mesh, cache_len),
+                          static_argnames=("attn_extent", "want_logits"))
+                  if chunk else None),
+    }
 
 
 class ServeEngine:
@@ -70,8 +110,26 @@ class ServeEngine:
     slots : int
         Slot-pool size == decode batch.
     cache_len : int
-        Shared cache length; every request needs
+        Logical per-slot cache length; every request needs
         ``prompt_len (+ n_patches) + max_new_tokens <= cache_len``.
+    page_size : int | "auto" | None
+        KV page size.  "auto" (default) picks the largest divisor of
+        ``cache_len`` <= 8; ``None`` keeps the dense per-slot reservation
+        (the pre-paging layout, kept for A/B benchmarks).
+    num_pages : int, optional
+        Physical pages including the reserved garbage page 0.  Default is
+        dense-equivalent capacity: ``slots * cache_len / page_size + 1``.
+        A smaller pool admits fewer concurrent requests (admission blocks
+        on the free list); a larger one admits more ``slots`` at the same
+        per-request footprint.
+    prefill_chunk : int, optional
+        Chunked prefill: prompts longer than this prefill as cache-append
+        chunks of this many tokens.  Requires a chunk-exact config
+        (``repro.steps.chunkable``) — raises ``ValueError`` otherwise.
+    sync_ticks : bool
+        Block on each decode tick before timestamping it — makes the
+        tick-interval stats measure real compute cadence (benchmarks);
+        leave False to keep the decode loop fully async.
     rt : UMTRuntime, optional
         Runtime to run on; when omitted the engine owns one
         (``umt``/``n_cores`` configure it).
@@ -83,13 +141,19 @@ class ServeEngine:
     def __init__(self, cfg, params, *, slots: int = 4, cache_len: int = 64,
                  mesh=None, rt: UMTRuntime | None = None, umt: bool = True,
                  n_cores: int | None = None, response_sink=None,
-                 idle_wait: float = 0.05, jit_steps=None):
+                 idle_wait: float = 0.05, jit_steps=None,
+                 page_size: int | str | None = "auto",
+                 num_pages: int | None = None,
+                 prefill_chunk: int | None = None,
+                 max_prefill_batch: int | None = None,
+                 sync_ticks: bool = False):
         self.cfg = cfg
         self.slots = slots
         self.cache_len = cache_len
         self.mesh = mesh
         self.response_sink = response_sink
         self.idle_wait = idle_wait
+        self.sync_ticks = sync_ticks
         self.rt = rt if rt is not None else UMTRuntime(
             n_cores=n_cores, umt=umt, trace=False)
         self._own_rt = rt is None
@@ -101,12 +165,41 @@ class ServeEngine:
             "ServeEngine on a baseline (umt=False) runtime needs "
             "n_cores >= 3: intake and decode occupy a worker each")
 
-        self.queue = RequestQueue()
         if jit_steps is not None:
-            self.prefill, self.insert, self.decode = jit_steps
-        else:
-            self.prefill, self.insert, self.decode = make_jit_steps(
-                cfg, mesh, cache_len)
+            assert jit_steps["cache_len"] == cache_len, (
+                "jit_steps were built for a different cache_len")
+            if page_size == "auto":
+                page_size = jit_steps["page_size"]
+            assert jit_steps["page_size"] == page_size, (
+                "jit_steps were built for a different page_size")
+        elif page_size == "auto":
+            page_size = auto_page_size(cache_len)
+        self.page_size: int | None = page_size
+        self.paged = page_size is not None
+
+        self.prefill_chunk = prefill_chunk
+        if prefill_chunk is not None:
+            assert prefill_chunk >= 1
+            if not chunkable(cfg, cache_len):
+                raise ValueError(
+                    f"{cfg.name}: chunked prefill needs linear-cache "
+                    "attention blocks (no MoE, no SSM, no SWA ring "
+                    "shorter than cache_len)")
+        self.max_prefill_batch = max_prefill_batch or slots
+
+        self.queue = RequestQueue()
+        if jit_steps is None:
+            jit_steps = make_jit_steps(cfg, mesh, cache_len,
+                                       page_size=page_size,
+                                       chunk=prefill_chunk is not None)
+        self.prefill = jit_steps["prefill"]
+        self.insert = jit_steps["insert"]
+        self.decode = jit_steps["decode"]
+        self.chunk = jit_steps.get("chunk")
+        if prefill_chunk is not None and self.chunk is None:
+            self.chunk = jax.jit(
+                make_prefill_chunk_step(cfg, mesh, cache_len),
+                static_argnames=("attn_extent", "want_logits"))
 
         self._params = None if callable(params) else params
         self._params_fn = params if callable(params) else None
@@ -115,20 +208,49 @@ class ServeEngine:
         if self._params_fn is None:
             self._params_ready.set()
 
-        self.cache = init_slot_cache(cfg, slots, cache_len,
-                                     jnp.dtype(cfg.dtype))
+        dt = jnp.dtype(cfg.dtype)
+        if self.paged:
+            assert cache_len % page_size == 0, (
+                f"page_size {page_size} must divide cache_len {cache_len}")
+            self.pages_per_slot = cache_len // page_size
+            if num_pages is None:
+                # dense-equivalent token capacity (+ the garbage page)
+                num_pages = slots * self.pages_per_slot + 1
+            self.pager = PagePool(num_pages, page_size)
+            self.cache = init_paged_slot_cache(cfg, slots, cache_len, dt,
+                                               page_size, num_pages)
+            self._table = np.zeros((slots, self.pages_per_slot), np.int32)
+            self._table_dev = jnp.array(self._table)
+        else:
+            self.pager = None
+            self.cache = init_slot_cache(cfg, slots, cache_len, dt)
+            self._table = self._table_dev = None
         extra = ((cfg.n_codebooks,) if cfg.frontend == "audio_codebooks"
                  else ())
         # hot-path state is device-resident: the decode loop never syncs
-        # to host — tokens are fetched once per *finished* request.  The
-        # device mask is always jnp.array (a copy): asarray may alias the
-        # numpy buffer, which async dispatch could then read *after* a
-        # later host-side mutation of self._active.
+        # to host — tokens are fetched once per *finished* request (plus
+        # one small per-tick sync while a request with eos/stop rules is
+        # live).  Device mirrors of host masks/tables are always
+        # jnp.array (a copy): asarray may alias the numpy buffer, which
+        # async dispatch could then read *after* a later host-side
+        # mutation.
         self._tokens = jnp.zeros((slots, 1) + extra, jnp.int32)
         self._active = np.zeros((slots,), bool)
         self._active_dev = jnp.array(self._active)
         self._slot_req: list[Request | None] = [None] * slots
         self._inserts: collections.deque = collections.deque()
+        # strong refs to every pre-rebind state version (cache, tokens,
+        # masks, tables, prefill rows) that a dispatched-but-pending
+        # computation may still read: on this backend a device buffer
+        # whose last Python reference drops can be recycled while an
+        # async computation still needs it, and the computation then
+        # reads whatever was written there next (observed as masked-0 /
+        # garbage tokens under load).  Cleared at every point where a
+        # device sync proves the chain has drained, and bounded by
+        # _retain_flush — each entry can pin a whole cache version, so an
+        # unbounded list is a memory leak with periodic allocator stalls.
+        self._retain: list = []
+        self._retain_max = 64
         self._lock = threading.Lock()          # inserts/counters only
         self._pending_prefills = 0
         self._intake_done = False
@@ -144,9 +266,17 @@ class ServeEngine:
             maxlen=4096)
         self._ttft_samples: collections.deque = collections.deque(
             maxlen=4096)
+        self._tick_intervals: collections.deque = collections.deque(
+            maxlen=65536)
+        self._last_tick_t: float | None = None
         self.stats_ticks = 0
         self.stats_occupancy_sum = 0.0
         self.stats_decode_tokens = 0
+        self.stats_max_live_slots = 0
+        self.stats_prefill_calls = 0
+        self.stats_prefill_reqs = 0
+        self.stats_prefill_chunks = 0
+        self.stats_stopped_early = 0
 
     # ------------------------------------------------------------ lifecycle
     def start(self):
@@ -200,72 +330,236 @@ class ServeEngine:
 
     def _intake(self):
         while True:
-            req = self.queue.get()            # monitored block: idles no core
-            if req is None:
+            # monitored block for the first arrival, then coalesce the
+            # round's worth of already-queued prompts into one prefill
+            # task (batched prefill)
+            batch = self.queue.get_batch(self.max_prefill_batch)
+            if batch is None:
                 break
             with self._lock:
-                self._pending_prefills += 1
-            self.rt.submit(self._prefill_one, req,
-                           name=f"serve.prefill:{req.rid}")
+                self._pending_prefills += len(batch)
+            self.rt.submit(self._prefill_round, batch,
+                           name=f"serve.prefill:{batch[0].rid}"
+                                f"x{len(batch)}")
         with self._lock:
             self._intake_done = True
         self._work.set()
 
-    def _prefill_one(self, req: Request):
-        exc = None
+    def _validate(self, req: Request):
+        """Admission-impossible geometry fails loudly at prefill time (not
+        assert: under python -O an oversized request would decode past the
+        cache and silently emit corrupt tokens)."""
+        p = self.cfg.n_patches \
+            if self.cfg.frontend == "vision_patches" else 0
+        req.total_len = int(np.asarray(req.tokens).shape[0]) + p
+        if req.total_len + req.max_new > self.cache_len:
+            return ValueError(
+                f"request {req.rid}: prompt {req.total_len} + max_new "
+                f"{req.max_new} exceeds cache_len {self.cache_len}")
+        if self.paged:
+            need = self.pager.pages_for(req.total_len + req.max_new - 1)
+            if need > self.pager.capacity:
+                return ValueError(
+                    f"request {req.rid}: needs {need} KV pages but the "
+                    f"pool only has {self.pager.capacity} — it can never "
+                    "be admitted")
+        if req.needs_host_tokens and \
+                self.cfg.frontend == "audio_codebooks":
+            return ValueError(
+                f"request {req.rid}: eos_id/stop are not supported for "
+                "audio-codebook frontends")
+        return None
+
+    def _finish_failed(self, req: Request, exc: BaseException):
+        if not req.done.is_set():
+            req.error = exc
+            req.t_done = time.monotonic()
+            req.done.set()
+        with self._lock:
+            self._pending_prefills -= 1
+        self._work.set()
+
+    def _prefill_round(self, reqs):
+        """One coalesced prefill round: validate, group by prompt shape,
+        run one batched (optionally chunked) prefill per group, and queue
+        the rows for insertion."""
+        remaining = list(reqs)
         try:
             io.wait(self._params_ready)
             if self._load_exc is not None:
                 raise RuntimeError("weights load failed") \
                     from self._load_exc
-            p = self.cfg.n_patches \
-                if self.cfg.frontend == "vision_patches" else 0
-            plen = int(np.asarray(req.tokens).shape[0]) + p
-            if plen + req.max_new > self.cache_len:
-                # hard error (not assert): under python -O an oversized
-                # request would decode past the cache and silently emit
-                # corrupt tokens — out-of-bounds scatters are dropped
-                raise ValueError(
-                    f"request {req.rid}: prompt {plen} + max_new "
-                    f"{req.max_new} exceeds cache_len {self.cache_len}")
-            tok = jnp.asarray(req.tokens)[None]
-            patches = None if req.patches is None else \
-                jnp.asarray(req.patches)[None]
-            row_cache, logits = self.prefill(self._params, tok, patches)
-            t0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (1,1,…)
-            # force the first token before stamping TTFT — dispatch is
-            # async, so the monotonic() above the sync would under-report
-            t0.block_until_ready()
-            req.t_first = time.monotonic()
-            req.out_tokens.append(t0[0, 0])
-            if req.max_new == 1:              # done straight from prefill
-                self._finish(req)
-            else:
-                with self._lock:
-                    self._inserts.append((req, row_cache, t0))
-        except BaseException as e:            # noqa: BLE001 — kept on req
-            exc = e
+            groups: dict = {}
+            for req in reqs:
+                err = self._validate(req)
+                if err is not None:
+                    remaining.remove(req)
+                    self._finish_failed(req, err)
+                else:
+                    key = (np.asarray(req.tokens).shape,
+                           req.patches is not None)
+                    groups.setdefault(key, []).append(req)
+            exc0 = None
+            for grp in groups.values():
+                try:
+                    # _prefill_group removes each request from
+                    # ``remaining`` the moment it is accounted (insert
+                    # queued / finished), so a mid-group failure fails
+                    # exactly the unaccounted ones — never double-counts
+                    self._prefill_group(grp, remaining)
+                except BaseException as e:      # noqa: BLE001
+                    for r in grp:
+                        if r in remaining:
+                            remaining.remove(r)
+                            self._finish_failed(r, e)
+                    if exc0 is None:
+                        exc0 = e
+            if exc0 is not None:
+                raise exc0
+        except BaseException as e:              # noqa: BLE001
+            for r in remaining:
+                self._finish_failed(r, e)
+            remaining.clear()
             raise
         finally:
-            # the decrement comes *after* a successful insert append, so
-            # the decode driver can never observe "drained" while a
-            # prefilled row is still on its way to a slot; on failure the
-            # request fails loudly (Request.wait re-raises) instead of
-            # hanging join()
-            with self._lock:
-                self._pending_prefills -= 1
-            if exc is not None and not req.done.is_set():
-                req.error = exc
-                req.t_done = time.monotonic()
-                req.done.set()
             self._work.set()
+
+    def _prefill_group(self, grp, remaining):
+        """Batched prefill of same-shape prompts; rows are queued for
+        insertion and sliced into slots by the decode driver.  The batch
+        is padded to the next power of two (repeating the last row) so
+        the jit sees a handful of shapes, not one per burst size —
+        per-row outputs are extent-invariant, so padding cannot perturb
+        the real rows."""
+        bg = len(grp)
+        toks = np.stack([np.asarray(r.tokens) for r in grp])
+        patches = None
+        if grp[0].patches is not None:
+            patches = np.stack([np.asarray(r.patches) for r in grp])
+        bpad = 1 << (bg - 1).bit_length()
+        if bpad > bg:
+            toks = np.concatenate(
+                [toks, np.repeat(toks[-1:], bpad - bg, axis=0)])
+            if patches is not None:
+                patches = np.concatenate(
+                    [patches, np.repeat(patches[-1:], bpad - bg, axis=0)])
+        tj = jnp.asarray(toks)
+        pj = None if patches is None else jnp.asarray(patches)
+
+        if (self.prefill_chunk is not None
+                and grp[0].total_len > self.prefill_chunk):
+            rows_cache, logits = self._prefill_chunked(tj, pj)
+        else:
+            rows_cache, logits = self.prefill(self._params, tj, pj)
+        t0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        # force the first token before stamping TTFT — dispatch is
+        # async, so a monotonic() above the sync would under-report
+        t0.block_until_ready()
+        t0_host = np.asarray(t0)        # already forced: free
+        now = time.monotonic()
+        with self._lock:                # rounds run on concurrent workers
+            self.stats_prefill_calls += 1
+            self.stats_prefill_reqs += bg
+        for i, r in enumerate(grp):
+            r.t_first = now
+            remaining.remove(r)
+            first = t0_host[i, 0]
+            if r.needs_host_tokens:
+                first = int(first)
+            r.out_tokens.append(first)
+            stopped = r.needs_host_tokens and self._hit_stop(r)
+            if stopped or r.max_new == 1:   # done straight from prefill
+                r.stopped = stopped and r.max_new > 1
+                if r.stopped:
+                    with self._lock:
+                        self.stats_stopped_early += 1
+                self._finish(r)
+                with self._lock:
+                    self._pending_prefills -= 1
+            else:
+                # the decrement shares the lock with the append, so the
+                # decode driver can never observe "drained" while a
+                # prefilled row is still on its way to a slot
+                with self._lock:
+                    self._inserts.append((r, rows_cache, i, t0))
+                    self._pending_prefills -= 1
+        self._work.set()
+
+    def _prefill_chunked(self, tj, pj):
+        """Cache-append chunked prefill of one group: bounded jit calls
+        with a scheduling point between chunks, so a long prompt never
+        monopolises its core for the whole prefill."""
+        bpad, plen = tj.shape[0], tj.shape[1]
+        dt = jnp.dtype(self.cfg.dtype)
+        rows_cache = init_cache(self.cfg, bpad, self.cache_len, dt)
+        npatch = 0 if pj is None else pj.shape[1]
+        c = self.prefill_chunk
+        off = c0 = 0
+        first = True
+        logits = None
+        chunks_done = 0
+        while c0 < plen:
+            c1 = min(c0 + c, plen)
+            covered = off + (c1 - c0) + (npatch if first else 0)
+            # static extent bucket (multiple of the chunk size, so jits
+            # are reused across rounds): total attention FLOPs stay at
+            # the one-shot level; non-final chunks skip the LM head
+            ext = min(self.cache_len, -(-covered // c) * c)
+            rows_cache, logits = self.chunk(
+                self._params, rows_cache, tj[:, c0:c1], jnp.int32(off),
+                pj if first else None, attn_extent=ext,
+                want_logits=c1 >= plen)
+            off = covered
+            first = False
+            c0 = c1
+            chunks_done += 1
+            # complete the chunk before dispatching the next: back-to-back
+            # async chunks would occupy the device queue exactly like one
+            # long prefill, and decode ticks would still wait out the
+            # whole round — the bounded gap is where ticks interleave.
+            # Then a scheduling point: the prefill worker checks its
+            # core's counters, exactly like any other task boundary.
+            jax.block_until_ready(rows_cache["pos"])
+            self.rt.taskyield()
+        with self._lock:                # rounds run on concurrent workers
+            self.stats_prefill_chunks += chunks_done
+        return rows_cache, logits
+
+    @staticmethod
+    def _hit_stop(req: Request) -> bool:
+        """Early-stop check on the host-visible emitted stream (only ever
+        called for ``needs_host_tokens`` requests, whose ``out_tokens``
+        are plain ints)."""
+        if req.eos_id is not None and req.out_tokens[-1] == req.eos_id:
+            return True
+        if req.stop:
+            out = req.out_tokens
+            for s in req.stop:
+                if len(out) >= len(s) and out[-len(s):] == s:
+                    return True
+        return False
 
     def _finish(self, req: Request):
         """Complete a request inline (one stacked device->host sync per
         request, not one per token); the response *write* — when a sink
         is configured — is its own UMT task so slow consumers never stall
-        the decode loop."""
-        req.out_tokens = list(np.asarray(jnp.stack(req.out_tokens)))
+        the decode loop.
+
+        ``out_tokens`` holds the *whole* per-tick token array per emitted
+        token (head entry is the already-host prefill token): slicing the
+        slot row happens here, forced immediately.  Never accumulate
+        unforced lazy slices of the hot-loop arrays instead — once the
+        backing array's last Python reference drops, its buffer can be
+        recycled under async dispatch while the slice is still pending,
+        and the value read back is whatever the pool wrote there next
+        (token corruption; found the hard way, see tests)."""
+        tail = req.out_tokens[1:]
+        if tail and not isinstance(tail[0], (int, np.integer)):
+            # numpy stack, not jnp: an eager jnp.stack compiles once per
+            # distinct length (~35ms each) — paid mid-serve, it stalls
+            # whole scheduling rounds
+            vals = np.stack([np.asarray(t) for t in tail])[:, req.slot, 0]
+            req.out_tokens = [req.out_tokens[0]] + list(vals)
         req.t_done = time.monotonic()
         with self._lock:
             self._n_completed += 1
@@ -282,6 +576,11 @@ class ServeEngine:
 
     # ------------------------------------------------------- decode driver
     def _do_inserts(self):
+        """Admit prefilled rows into free slots, strictly FIFO.  Paged:
+        the head reserves its worst-case pages first — if the pool cannot
+        cover them, admission *blocks* (the row stays queued; nothing is
+        written) until a completion frees pages.  FIFO keeps a large
+        request from being starved by smaller ones slipping past it."""
         while True:
             free = np.flatnonzero(~self._active)
             if len(free) == 0:
@@ -289,33 +588,123 @@ class ServeEngine:
             with self._lock:
                 if not self._inserts:
                     return
-                req, row_cache, t0 = self._inserts.popleft()
+                req, rows_cache, row, t0 = self._inserts[0]
+            ids = None
+            if self.paged:
+                need = self.pager.pages_for(req.total_len + req.max_new - 1)
+                ids = self.pager.alloc(need)
+                if ids is None:
+                    return              # admission blocked on free pages
+            with self._lock:
+                self._inserts.popleft()
             s = int(free[0])
-            self.cache = self.insert(self.cache, row_cache, jnp.int32(s))
-            self._tokens = self._tokens.at[s].set(t0[0])
+            # pre-rebind versions are args of pending work: keep them
+            # referenced (see _retain)
+            self._retain.append((self.cache, self._tokens,
+                                 self._active_dev, self._table_dev,
+                                 rows_cache, t0))
+            row_dev, slot_dev = jnp.int32(row), jnp.int32(s)
+            if self.paged:
+                req.pages = ids
+                self._table[s, :] = GARBAGE_PAGE
+                self._table[s, :len(ids)] = ids
+                self._table_dev = jnp.array(self._table)
+                table_row = jnp.array(self._table[s])
+                self._retain.append((row_dev, slot_dev, table_row))
+                self.cache = self.insert(self.cache, rows_cache, row_dev,
+                                         slot_dev, table_row)
+            else:
+                self._retain.append((row_dev, slot_dev))
+                self.cache = self.insert(self.cache, rows_cache, row_dev,
+                                         slot_dev)
+            self._tokens = self._tokens.at[s].set(t0[row])
             self._active[s] = True
             self._active_dev = jnp.array(self._active)
             self._slot_req[s] = req
             req.slot = s
 
+    def _retain_flush(self, synced: bool):
+        """Drop the pinned pre-rebind state versions.  ``synced=True``
+        when the caller just forced the chain (every retained buffer has
+        executed); otherwise flush only past the depth cap, paying one
+        explicit drain first."""
+        if synced:
+            self._retain.clear()
+        elif len(self._retain) > self._retain_max:
+            jax.block_until_ready(self.cache["pos"])
+            self._retain.clear()
+
+    def _release_slot(self, s: int):
+        """Free a slot and, when paged, its pages — immediately, so the
+        very next admission can reuse them; the slot's table rows are
+        re-pointed at the garbage page so the dead slot's frozen-pos
+        cache writes land nowhere."""
+        req = self._slot_req[s]
+        self._active[s] = False
+        self._slot_req[s] = None
+        if self.paged and req.pages is not None:
+            self._table[s, :] = GARBAGE_PAGE
+            self.pager.free(req.pages)
+            req.pages = None
+
     def _tick(self):
-        self._tokens, self.cache = self.decode(
-            self._params, self.cache, self._tokens, self._active_dev)
-        n_live = int(self._active.sum())
+        self._retain.append((self.cache, self._tokens, self._active_dev,
+                             self._table_dev))
+        if self.paged:
+            self._tokens, self.cache = self.decode(
+                self._params, self.cache, self._tokens, self._active_dev,
+                self._table_dev)
+        else:
+            self._tokens, self.cache = self.decode(
+                self._params, self.cache, self._tokens, self._active_dev)
+        if self.sync_ticks:
+            jax.block_until_ready(self._tokens)
+        now = time.monotonic()
+        if self._last_tick_t is not None:
+            with self._lock:    # stats() iterates this deque concurrently
+                self._tick_intervals.append(now - self._last_tick_t)
+        self._last_tick_t = now
+        live = np.flatnonzero(self._active)
+        n_live = len(live)
         self.stats_ticks += 1
         self.stats_decode_tokens += n_live
         self.stats_occupancy_sum += n_live / self.slots
+        if n_live > self.stats_max_live_slots:
+            self.stats_max_live_slots = n_live
+        host_toks = None
+        if any(self._slot_req[s].needs_host_tokens for s in live):
+            host_toks = np.asarray(self._tokens)   # one small sync
         freed = False
-        for s in np.flatnonzero(self._active):
+        for s in live:
             req = self._slot_req[s]
-            req.out_tokens.append(self._tokens[s, 0])   # device, no sync
-            if len(req.out_tokens) >= req.max_new:
-                self._active[s] = False       # slot freed immediately
-                self._slot_req[s] = None
-                freed = True
+            stopped = False
+            if req.needs_host_tokens:
+                req.out_tokens.append(int(host_toks[s, 0]))
+                stopped = self._hit_stop(req)
+            else:
+                # retain the whole tick array (NOT a lazy slice of it —
+                # see _finish); one entry per emitted token
+                req.out_tokens.append(self._tokens)
+            if stopped or len(req.out_tokens) >= req.max_new:
+                req.stopped = stopped and len(req.out_tokens) < req.max_new
+                if req.stopped:
+                    with self._lock:
+                        self.stats_stopped_early += 1
+                # finish FIRST: its device->host force drains every
+                # computation dispatched so far, so by the time the pages
+                # are freed and the block table rewritten nothing pending
+                # can still read them
                 self._finish(req)
+                self._release_slot(s)         # slot + pages freed now
+                freed = True
         if freed:
             self._active_dev = jnp.array(self._active)
+            if self.paged:
+                self._table_dev = jnp.array(self._table)
+        # freed: a finish forced the chain; sync_ticks / host_toks: this
+        # tick's sync did.  Otherwise flush only past the depth cap.
+        self._retain_flush(synced=freed or self.sync_ticks
+                           or host_toks is not None)
 
     def _drained(self) -> bool:
         with self._lock:
@@ -328,6 +717,7 @@ class ServeEngine:
             if self._active.any():
                 self._tick()
                 continue
+            self._last_tick_t = None     # idle gap: not tick jitter
             if self._drained():
                 break
             self._work.clear()
@@ -342,14 +732,17 @@ class ServeEngine:
 
     # ------------------------------------------------------------ reporting
     def stats(self) -> dict:
-        """Latency quantiles come from a bounded sample window (the most
-        recent 4096 completions), counts are exact."""
+        """Latency quantiles come from bounded sample windows (the most
+        recent 4096 completions / 65536 ticks), counts are exact.  Tick
+        intervals measure real compute cadence only with
+        ``sync_ticks=True`` (dispatch cadence otherwise)."""
         with self._lock:
             n = self._n_completed
             tokens_out = self._tokens_out
             lats = sorted(self._lat_samples)
             ttfts = sorted(self._ttft_samples)
-        return {
+            ticks = sorted(self._tick_intervals)
+        out = {
             "requests": n,
             "slots": self.slots,
             "ticks": self.stats_ticks,
@@ -357,8 +750,19 @@ class ServeEngine:
             "tokens_out": tokens_out,
             "occupancy": (self.stats_occupancy_sum / self.stats_ticks
                           if self.stats_ticks else 0.0),
+            "max_live_slots": self.stats_max_live_slots,
+            "prefill_calls": self.stats_prefill_calls,
+            "prefill_reqs": self.stats_prefill_reqs,
+            "prefill_chunks": self.stats_prefill_chunks,
+            "stopped_early": self.stats_stopped_early,
             "p50_latency_s": percentile(lats, 0.50),
             "p99_latency_s": percentile(lats, 0.99),
             "p50_ttft_s": percentile(ttfts, 0.50),
             "p99_ttft_s": percentile(ttfts, 0.99),
+            "p50_tick_s": percentile(ticks, 0.50),
+            "p99_tick_s": percentile(ticks, 0.99),
+            "page_size": self.page_size,
         }
+        if self.paged:
+            out.update(self.pager.stats())
+        return out

@@ -1,0 +1,109 @@
+"""Free-list pager for the paged KV cache (vLLM-style block allocator).
+
+The serve engine's linear attention cache leaves are pools of
+``num_pages`` physical pages of ``page_size`` token slots (see
+``repro.steps.init_paged_slot_cache``).  This module owns the *host-side*
+accounting: which physical pages are free, and which belong to which
+request.  Allocation is worst-case at admission (a request reserves every
+page it could ever touch: ``prompt + max_new - 1`` token slots), which is
+what makes the scheme deadlock-free — a request that is admitted can
+always run to completion, so admission can simply *block* (the engine
+keeps the insert queued) until enough pages free up, and a freed page is
+immediately reusable by any other slot.
+
+Page 0 is the reserved **garbage page**: it is never handed out.  Dead
+slots' block tables and unreserved logical pages point at it, so their
+(masked, frozen-position) cache scatters land there instead of on a live
+slot's pages.
+
+The pager is plain host state guarded by one lock — it is touched a few
+times per *request* (alloc at insert, free at completion), never per
+token.
+"""
+from __future__ import annotations
+
+import threading
+
+GARBAGE_PAGE = 0
+
+
+class PagePool:
+    """Free-list allocator over pages ``1 .. num_pages - 1``.
+
+    ``alloc`` is all-or-nothing (no partial grants — the engine blocks
+    admission instead), ``free`` returns pages in any order (fragmentation
+    is irrelevant: the block table gives every slot a fully scattered
+    view).  Tracks ``used_peak`` for the benchmark's pool-occupancy
+    report.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        assert num_pages >= 2, "need >= 1 usable page + garbage page 0"
+        assert page_size >= 1
+        self.num_pages = num_pages
+        self.page_size = page_size
+        # LIFO free list, seeded so the first allocations hand out
+        # ascending ids (nicer to read in tests/traces)
+        self._free = list(range(num_pages - 1, GARBAGE_PAGE, -1))
+        self._lock = threading.Lock()
+        self.used_peak = 0
+        self.allocs = 0
+        self.alloc_failures = 0
+
+    @property
+    def capacity(self) -> int:
+        """Usable pages (excludes the garbage page)."""
+        return self.num_pages - 1
+
+    @property
+    def free_pages(self) -> int:
+        with self._lock:
+            return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.capacity - self.free_pages
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` token slots."""
+        return max(0, -(-n_tokens // self.page_size))
+
+    def alloc(self, n_pages: int) -> list[int] | None:
+        """Take ``n_pages`` pages off the free list, or ``None`` (and no
+        partial grant) when fewer are free — the caller blocks admission
+        and retries after the next free."""
+        with self._lock:
+            if n_pages > len(self._free):
+                self.alloc_failures += 1
+                return None
+            ids = [self._free.pop() for _ in range(n_pages)]
+            self.allocs += 1
+            used = self.capacity - len(self._free)
+            if used > self.used_peak:
+                self.used_peak = used
+            return ids
+
+    def free(self, ids) -> None:
+        with self._lock:
+            for i in ids:
+                assert GARBAGE_PAGE < i < self.num_pages, f"bad page id {i}"
+                assert i not in self._free, f"double free of page {i}"
+                self._free.append(i)
+
+    def stats(self) -> dict:
+        with self._lock:
+            free = len(self._free)
+        return {
+            "num_pages": self.num_pages,
+            "page_size": self.page_size,
+            "pages_capacity": self.capacity,
+            "pages_free": free,
+            "pages_used": self.capacity - free,
+            "pages_used_peak": self.used_peak,
+            "page_allocs": self.allocs,
+            "page_alloc_failures": self.alloc_failures,
+        }
+
+    def __repr__(self):
+        return (f"<PagePool {self.used_pages}/{self.capacity} used "
+                f"(page_size={self.page_size}, peak={self.used_peak})>")

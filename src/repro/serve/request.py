@@ -22,24 +22,46 @@ class Request:
     frontends; ``patches``: optional (n_patches, d_model) vision embeddings;
     ``max_new_tokens``: total tokens to emit (the prefill argmax counts as
     the first one, matching the one-shot serve path).
-    """
+
+    ``eos_id`` / ``stop``: early-stop conditions checked on the emitted
+    greedy stream — generation ends the tick the stream emits ``eos_id``,
+    or the tick its tail equals one of the ``stop`` sequences (lists of
+    token ids).  The stopping token/sequence is *included* in
+    ``out_tokens``, so the output is always a prefix of the one-shot
+    greedy row; the engine frees the slot (and its KV pages) the same
+    tick.  Not supported for audio-codebook frontends (a step emits a
+    codebook vector, not one id)."""
 
     __slots__ = ("rid", "tokens", "patches", "max_new", "out_tokens",
-                 "t_submit", "t_first", "t_done", "done", "slot", "error")
+                 "t_submit", "t_first", "t_done", "done", "slot", "error",
+                 "eos_id", "stop", "stopped", "pages", "total_len")
 
-    def __init__(self, rid, tokens, patches=None, max_new_tokens: int = 16):
+    def __init__(self, rid, tokens, patches=None, max_new_tokens: int = 16,
+                 eos_id: int | None = None, stop=None):
         assert max_new_tokens >= 1
         self.rid = rid
         self.tokens = tokens
         self.patches = patches
         self.max_new = max_new_tokens
+        self.eos_id = eos_id
+        self.stop = [list(s) for s in stop] if stop else None
+        if self.stop:
+            assert all(len(s) >= 1 for s in self.stop)
+        self.stopped = False          # ended early on eos_id/stop
         self.out_tokens: list = []
         self.t_submit: float | None = None
         self.t_first: float | None = None
         self.t_done: float | None = None
         self.done = threading.Event()
         self.slot: int | None = None
+        self.pages: list | None = None   # physical KV pages while live
+        self.total_len: int = 0          # prompt (+ patches) length
         self.error: BaseException | None = None
+
+    @property
+    def needs_host_tokens(self) -> bool:
+        """Early stop needs the emitted ids on the host every tick."""
+        return self.eos_id is not None or bool(self.stop)
 
     # ---- latency accessors (seconds; None until the request completes)
     @property
@@ -109,6 +131,22 @@ class RequestQueue:
                 if self._closed:
                     return None
             io.wait(self._avail)
+
+    def get_batch(self, max_n: int | None = None):
+        """Block (monitored) for the next request, then drain whatever
+        else is already queued — up to ``max_n`` total — without blocking
+        again.  One scheduling round's worth of arrivals, coalesced for
+        batched prefill.  Returns ``None`` once closed and drained."""
+        first = self.get()
+        if first is None:
+            return None
+        batch = [first]
+        with self._lock:
+            while self._q and (max_n is None or len(batch) < max_n):
+                batch.append(self._q.popleft())
+            if not self._q and not self._closed:
+                self._avail.clear()
+        return batch
 
     def __len__(self):
         with self._lock:

@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .models.lm import forward, init_params, init_cache
+from .models.lm import cache_meta, forward, init_params, init_cache
 from .models.layers import softmax_xent
 from .optim import OptHParams, adamw_init, adamw_update
 from .sharding import sharding_ctx
@@ -128,6 +128,66 @@ def init_slot_cache(cfg, slots: int, cache_len: int, dtype):
     return cache
 
 
+# ------------------------------------------------------------ paged KV cache
+def paged_names(spec, cache_len: int) -> frozenset:
+    """Leaf names of this pattern spec whose cache is paged: the *linear*,
+    cache_len-long attention leaves.  Bounded leaves — true SWA rings
+    (window < cache_len), the SSM conv tail and recurrent state — are O(1)
+    or O(window) per slot and stay dense rows."""
+    if spec.kind == "ssm":
+        return frozenset()
+    if spec.attn == "mla":
+        return frozenset(("ckv", "krope"))
+    if spec.window is not None and spec.window < cache_len:
+        return frozenset()
+    return frozenset(("k", "v"))
+
+
+def chunkable(cfg, cache_len: int) -> bool:
+    """Can prefill be chunked bit-exactly for this config?  Requires every
+    block to be linear-cache attention: MoE routing capacity depends on
+    the sequence extent (chunking would change drop behaviour), the
+    chunked-SSD scan is tied to ``ssm_chunk`` boundaries, and a true SWA
+    ring (window < cache_len) has no linear append."""
+    for spec in cfg.pattern:
+        if spec.kind == "ssm" or spec.mlp == "moe":
+            return False
+        if spec.window is not None and spec.window < cache_len:
+            return False
+    return True
+
+
+def init_paged_slot_cache(cfg, slots: int, cache_len: int, dtype,
+                          page_size: int, num_pages: int):
+    """Slot cache with linear attention leaves replaced by paged pools.
+
+    A paged leaf holds ``num_pages`` physical pages of ``page_size`` token
+    slots — shape (n_repeats, num_pages, page_size, *tail) instead of
+    (n_repeats, slots, cache_len, *tail) — addressed through a per-slot
+    block table (held by the caller, see repro.serve.pager.PagePool).
+    Page 0 is the reserved garbage page: dead slots and unallocated
+    logical pages point there, so their scatters never corrupt a live
+    slot.  Bounded leaves keep the dense per-slot layout of
+    :func:`init_slot_cache`."""
+    assert cache_len % page_size == 0, (cache_len, page_size)
+    assert num_pages >= 2, "need at least one usable page + garbage page 0"
+    dt = jnp.dtype(dtype)
+    meta = cache_meta(cfg, slots, cache_len)
+    blocks = []
+    for spec, bm in zip(cfg.pattern, meta["blocks"]):
+        paged = paged_names(spec, cache_len)
+        leaves = {}
+        for name, m in bm.items():
+            if name in paged:
+                assert m.shape[2] == cache_len, (name, m.shape)
+                shape = (m.shape[0], num_pages, page_size) + m.shape[3:]
+            else:
+                shape = m.shape
+            leaves[name] = jnp.zeros(shape, dt)
+        blocks.append(leaves)
+    return {"pos": jnp.zeros((slots,), jnp.int32), "blocks": tuple(blocks)}
+
+
 def make_insert_step(cfg, mesh=None):
     """Scatter one prefilled request (a batch=1 cache from
     ``make_prefill_step`` with the pool's ``cache_len``) into slot ``slot``
@@ -153,21 +213,80 @@ def make_insert_step(cfg, mesh=None):
     return insert_step
 
 
-def make_decode_step(cfg, mesh=None):
+def make_batched_insert_step(cfg, mesh=None, *, cache_len: int,
+                             page_size: int | None = None):
+    """Insert row ``row`` of a *batched* prefill output into slot ``slot``
+    of the shared cache (dense or paged).
+
+    Dense (``page_size is None``):
+        (cache, rows_cache, row, slot) -> cache
+    Paged:
+        (cache, rows_cache, row, slot, table_row) -> cache
+        ``table_row``: (pages_per_slot,) physical page ids for the slot;
+        unreserved logical pages point at garbage page 0 (their scatters
+        collide there and are never read valid).
+
+    ``rows_cache`` is a dense (B, cache_len) prefill/chunk cache; ``row``
+    and ``slot`` may be traced scalars, so one jit covers every
+    (row, slot) pair per batch shape."""
+
+    def insert_step(cache, rows_cache, row, slot, table_row=None):
+        with sharding_ctx(mesh, DECODE_RULES):
+            new_blocks = []
+            for spec, cb, rb in zip(cfg.pattern, cache["blocks"],
+                                    rows_cache["blocks"]):
+                paged = (paged_names(spec, cache_len)
+                         if page_size is not None else frozenset())
+                leaves = {}
+                for name, c in cb.items():
+                    r = jax.lax.dynamic_slice_in_dim(rb[name], row, 1,
+                                                     axis=1)
+                    if name in paged:
+                        # (n_repeats, 1, cache_len, *tail) -> logical
+                        # pages, scattered to the slot's physical pages
+                        pps = cache_len // page_size
+                        rr = r[:, 0].reshape(
+                            (r.shape[0], pps, page_size) + r.shape[3:])
+                        leaves[name] = c.at[:, table_row].set(
+                            rr.astype(c.dtype))
+                    else:
+                        start = (0, slot) + (0,) * (c.ndim - 2)
+                        leaves[name] = jax.lax.dynamic_update_slice(
+                            c, r.astype(c.dtype), start)
+                new_blocks.append(leaves)
+            pos = cache["pos"].at[slot].set(
+                rows_cache["pos"].astype(jnp.int32))
+            return {"pos": pos, "blocks": tuple(new_blocks)}
+
+    return insert_step
+
+
+def make_decode_step(cfg, mesh=None, *, cache_len: int | None = None,
+                     page_size: int | None = None):
     """Masked continuous-batching decode over the slot pool:
-    (params, cache, tokens, active) -> (next_tokens, cache).
+    (params, cache, tokens, active[, table]) -> (next_tokens, cache).
 
     ``cache["pos"]`` is (slots,) per-slot positions; ``active`` is a
     (slots,) bool mask.  Dead slots emit token 0 and do not advance
     ``pos`` — their rows still flow through the batched matmuls (rows are
     independent, MoE capacity is per-row) but can never corrupt a live
-    slot's sampling, and an insert replaces their whole row anyway."""
+    slot's sampling, and an insert replaces their whole row anyway.
 
-    def decode_step(params, cache, tokens, active):
+    With ``page_size`` set the linear attention leaves of ``cache`` are
+    paged pools and the extra ``table`` argument carries the
+    (slots, pages_per_slot) block table; dead slots' tables point at
+    garbage page 0, so their (frozen-``pos``) cache writes land there."""
+    paged = page_size is not None
+    if paged:
+        assert cache_len is not None and cache_len % page_size == 0
+
+    def decode_step(params, cache, tokens, active, table=None):
         with sharding_ctx(mesh, DECODE_RULES):
             pc = cast_tree(params, cfg.dtype)
+            pages = ({"table": table, "page_size": page_size,
+                      "cache_len": cache_len} if paged else None)
             out = forward(pc, cfg, tokens, mode="decode", pos=cache["pos"],
-                          cache=cache)
+                          cache=cache, pages=pages)
             nxt = jnp.argmax(out["logits"], axis=-1).astype(jnp.int32)
             amask = active.reshape((-1,) + (1,) * (nxt.ndim - 1))
             nxt = jnp.where(amask, nxt, 0)
@@ -176,10 +295,50 @@ def make_decode_step(cfg, mesh=None):
                                          cache["pos"])
             return nxt, new_cache
 
+    if not paged:
+        def decode_step_dense(params, cache, tokens, active):
+            return decode_step(params, cache, tokens, active)
+        return decode_step_dense
     return decode_step
+
+
+def make_prefill_chunk_step(cfg, mesh=None, cache_len: int | None = None):
+    """Cache-append prefill continuation (chunked/preemptible prefill):
+
+        (params, row_cache, tokens, q_off[, patches]) -> (row_cache,
+        last-position logits)
+
+    ``row_cache`` is a dense (B, cache_len) cache (start from
+    ``init_cache``); ``tokens`` is the (B, C) chunk written at positions
+    [q_off, q_off + C).  ``q_off`` may be traced — one jit per chunk
+    *shape*, not per offset.  The final chunk's logits equal the one-shot
+    prefill's bit-for-bit (masked key lanes are exact zeros); MoE/SSM/SWA
+    ring patterns cannot chunk exactly — see :func:`chunkable`."""
+    assert cache_len is not None
+    assert chunkable(cfg, cache_len), (
+        f"{cfg.name}: chunked prefill needs linear-cache attention blocks "
+        "(no MoE, no SSM, no SWA ring shorter than cache_len)")
+
+    def chunk_step(params, row_cache, tokens, q_off, patches=None, *,
+                   attn_extent=None, want_logits=True):
+        # attn_extent/want_logits are static (jit with
+        # static_argnames): a per-chunk extent bucket keeps total
+        # chunked FLOPs at the one-shot level, and non-final chunks skip
+        # the LM head entirely
+        with sharding_ctx(mesh):
+            pc = cast_tree(params, cfg.dtype)
+            out = forward(pc, cfg, tokens, mode="prefill_chunk", pos=q_off,
+                          cache=row_cache, patches=patches,
+                          cache_len=cache_len, attn_extent=attn_extent,
+                          want_logits=want_logits)
+            return out["cache"], out["logits"]
+
+    return chunk_step
 
 
 __all__ = ["init_train_state", "make_train_step", "make_prefill_step",
            "make_serve_step", "make_insert_step", "make_decode_step",
-           "init_slot_cache", "greedy_oneshot", "cast_tree", "init_cache",
+           "make_batched_insert_step", "make_prefill_chunk_step",
+           "init_slot_cache", "init_paged_slot_cache", "paged_names",
+           "chunkable", "greedy_oneshot", "cast_tree", "init_cache",
            "OptHParams"]

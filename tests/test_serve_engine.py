@@ -1,5 +1,7 @@
 """ServeEngine: request-queue semantics (fast) and engine/one-shot greedy
-token equivalence under randomized arrival orders and slot churn (slow)."""
+token equivalence — paged KV cache, batched & chunked prefill, pool
+exhaustion, EOS/stop early-exit — under randomized arrival orders and
+slot churn (slow)."""
 import threading
 import time
 
@@ -48,7 +50,34 @@ def test_request_queue_get_blocks_until_put():
     assert got and got[0] is r
 
 
+def test_request_queue_get_batch_coalesces_a_round():
+    q = RequestQueue()
+    for i in range(5):
+        q.put(Request(i, None))
+    assert [r.rid for r in q.get_batch(3)] == [0, 1, 2]
+    assert [r.rid for r in q.get_batch(3)] == [3, 4]
+    q.close()
+    assert q.get_batch(3) is None       # closed + drained
+    q2 = RequestQueue()
+    for i in range(4):
+        q2.put(Request(i, None))
+    assert [r.rid for r in q2.get_batch()] == [0, 1, 2, 3]  # no cap
+
+
+def test_request_stop_fields_validation():
+    r = Request(0, None, eos_id=5, stop=[[1, 2], (3,)])
+    assert r.needs_host_tokens and r.stop == [[1, 2], [3]]
+    assert not Request(1, None).needs_host_tokens
+    with pytest.raises(AssertionError):
+        Request(2, None, stop=[[]])
+
+
 # ------------------------------------------------- engine equivalence (slow)
+N_REQ, PLEN, GEN_MAX = 8, 8, 6
+CACHE_LEN = PLEN + GEN_MAX              # 14 -> auto page_size 7
+PAGE_SIZE = 7
+
+
 @pytest.fixture(scope="module")
 def built():
     import jax
@@ -60,80 +89,229 @@ def built():
 
     cfg = get("qwen2.5-14b").tiny()
     params = init_params(cfg, jax.random.PRNGKey(0))
-    n_req, plen, gen_max = 8, 8, 6
-    cache_len = plen + gen_max
     prompts = np.asarray(jax.random.randint(
-        jax.random.PRNGKey(1), (n_req, plen), 0, cfg.vocab))
-    steps = make_jit_steps(cfg, cache_len=cache_len)
+        jax.random.PRNGKey(1), (N_REQ, PLEN), 0, cfg.vocab))
+    steps = make_jit_steps(cfg, cache_len=CACHE_LEN, page_size=PAGE_SIZE,
+                           chunk=True)
     serve_step = jax.jit(make_serve_step(cfg))
 
     # one-shot reference: all requests in one static batch
-    ref = np.asarray(greedy_oneshot(steps[0], serve_step, params,
-                                    jnp.asarray(prompts), None, gen_max))
+    ref = np.asarray(greedy_oneshot(steps["prefill"], serve_step, params,
+                                    jnp.asarray(prompts), None, GEN_MAX))
     return dict(cfg=cfg, params=params, prompts=prompts, steps=steps,
-                ref=ref, n_req=n_req, gen_max=gen_max, cache_len=cache_len)
+                ref=ref)
+
+
+def _run_engine(b, reqs, gaps=None, **kw):
+    from repro.serve import ServeEngine
+
+    kw.setdefault("slots", 3)
+    kw.setdefault("cache_len", CACHE_LEN)
+    kw.setdefault("umt", True)
+    kw.setdefault("n_cores", 4)
+    if kw.get("page_size", PAGE_SIZE) == PAGE_SIZE and \
+            "jit_steps" not in kw:
+        kw["jit_steps"] = b["steps"]
+        kw.setdefault("page_size", PAGE_SIZE)
+    with ServeEngine(b["cfg"], b["params"], **kw) as eng:
+        for i, r in enumerate(reqs):
+            eng.submit(r)
+            if gaps is not None and gaps[i] > 0:
+                time.sleep(gaps[i])
+        eng.close()
+        eng.join()
+        stats = eng.stats()
+        pager = eng.pager
+    return stats, pager
 
 
 @pytest.mark.slow
 @pytest.mark.parametrize("seed,umt", [(0, True), (1, True), (2, False)])
 def test_engine_matches_oneshot_under_random_arrivals(built, seed, umt):
     """Randomized arrival order, arrival gaps, and generation budgets over
-    a 3-slot pool (slots < requests forces churn): every request's greedy
-    tokens must equal its one-shot row, on the UMT runtime and baseline."""
-    from repro.serve import ServeEngine
-
+    a 3-slot paged pool (slots < requests forces churn): every request's
+    greedy tokens must equal its one-shot row, on the UMT runtime and
+    baseline."""
     b = built
     rng = np.random.default_rng(seed)
-    order = rng.permutation(b["n_req"])
-    gens = rng.integers(1, b["gen_max"] + 1, b["n_req"])  # incl. gen==1
-    gaps = rng.exponential(0.005, b["n_req"])
+    order = rng.permutation(N_REQ)
+    gens = rng.integers(1, GEN_MAX + 1, N_REQ)  # incl. gen==1
+    gaps = rng.exponential(0.005, N_REQ)
 
-    reqs = {int(i): Request(int(i), b["prompts"][i],
-                            max_new_tokens=int(gens[i])) for i in order}
-    with ServeEngine(b["cfg"], b["params"], slots=3,
-                     cache_len=b["cache_len"], umt=umt, n_cores=4,
-                     jit_steps=b["steps"]) as eng:
-        for i, g in zip(order, gaps):
-            eng.submit(reqs[int(i)])
-            if g > 0:
-                time.sleep(g)
-        eng.close()
-        eng.join()
-        stats = eng.stats()
+    reqs = [Request(int(i), b["prompts"][i], max_new_tokens=int(gens[i]))
+            for i in order]
+    stats, pager = _run_engine(b, reqs, gaps, umt=umt)
 
-    for i, r in reqs.items():
+    for r in reqs:
         assert r.done.is_set()
         got = np.asarray(r.out_tokens, np.int32)
         assert got.shape == (r.max_new,)
-        assert np.array_equal(got, b["ref"][i, :r.max_new]), (
-            f"request {i} (seed {seed}, umt {umt})")
-    assert stats["requests"] == b["n_req"]
+        assert np.array_equal(got, b["ref"][r.rid, :r.max_new]), (
+            f"request {r.rid} (seed {seed}, umt {umt})")
+    assert stats["requests"] == N_REQ
     assert 0.0 < stats["occupancy"] <= 1.0
     assert stats["p50_latency_s"] <= stats["p99_latency_s"]
+    assert stats["prefill_reqs"] == N_REQ
+    assert pager.used_pages == 0        # every page returned
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_engine_fuzz_pool_and_chunk_schedules(built, seed):
+    """Seeded schedule fuzz at the engine level: random pool tightness
+    (admission blocking), random chunked-prefill size (incl. ragged
+    boundaries), random budgets/arrival gaps — tokens stay bit-identical
+    to the one-shot rows and the pool drains clean."""
+    b = built
+    rng = np.random.default_rng(1000 + seed)
+    pps = CACHE_LEN // PAGE_SIZE
+    num_pages = int(rng.choice([2 * pps + 1, 2 * pps + 2, 3 * pps + 1]))
+    chunk = rng.choice([0, 3, 5])       # 0 = unchunked
+    gens = rng.integers(1, GEN_MAX + 1, N_REQ)
+    gaps = rng.exponential(0.002, N_REQ)
+    order = rng.permutation(N_REQ)
+
+    reqs = [Request(int(i), b["prompts"][i], max_new_tokens=int(gens[i]))
+            for i in order]
+    stats, pager = _run_engine(
+        b, reqs, gaps, num_pages=num_pages,
+        prefill_chunk=int(chunk) if chunk else None)
+    for r in reqs:
+        got = np.asarray(r.wait(), np.int32)
+        assert np.array_equal(got, b["ref"][r.rid, :r.max_new]), (
+            f"request {r.rid} (seed {seed}, pages {num_pages}, "
+            f"chunk {chunk})")
+    if chunk:
+        assert stats["prefill_chunks"] > 0
+    assert pager.used_pages == 0
+    assert stats["pages_used_peak"] <= pager.capacity
+
+
+@pytest.mark.slow
+def test_pool_exhaustion_serialises_but_never_corrupts(built):
+    """A pool with room for exactly one request: admission must block
+    (max one live slot, alloc failures observed) and every stream must
+    still be bit-exact — exhaustion degrades throughput, never tokens."""
+    b = built
+    need = -(-(PLEN + GEN_MAX - 1) // PAGE_SIZE)    # pages per request
+    reqs = [Request(i, b["prompts"][i], max_new_tokens=GEN_MAX)
+            for i in range(5)]
+    stats, pager = _run_engine(b, reqs, num_pages=need + 1)
+    for r in reqs:
+        assert np.array_equal(np.asarray(r.wait(), np.int32),
+                              b["ref"][r.rid])
+    assert stats["max_live_slots"] == 1
+    assert pager.alloc_failures > 0
+    assert pager.used_pages == 0
+
+
+@pytest.mark.slow
+def test_eos_and_stop_sequences_evict_eagerly(built):
+    """EOS / stop-sequence requests end the tick the pattern appears —
+    output is the exact one-shot prefix including the stopping tokens —
+    and their slot + pages free immediately (the pool is empty again as
+    soon as the request completes, not at drain)."""
+    from repro.serve import ServeEngine
+
+    b = built
+    ref = b["ref"]
+    # eos at the 3rd emitted token of row 0; stop = rows 1's tokens 2..3
+    eos = int(ref[0, 2])
+    k_eos = int(np.argmax(ref[0] == eos)) + 1
+    stop = [int(ref[1, 2]), int(ref[1, 3])]
+    # find where that 2-gram first completes in row 1
+    k_stop = next(j + 1 for j in range(1, GEN_MAX)
+                  if list(ref[1, j - 1:j + 1]) == stop)
+    r_eos = Request(0, b["prompts"][0], max_new_tokens=GEN_MAX,
+                    eos_id=eos)
+    r_stop = Request(1, b["prompts"][1], max_new_tokens=GEN_MAX,
+                     stop=[stop])
+    # eos on the very first (prefill) token: never takes a slot at all
+    r_first = Request(2, b["prompts"][2], max_new_tokens=GEN_MAX,
+                      eos_id=int(ref[2, 0]))
+    with ServeEngine(b["cfg"], b["params"], slots=3, cache_len=CACHE_LEN,
+                     umt=True, n_cores=4, jit_steps=b["steps"]) as eng:
+        for r in (r_eos, r_stop, r_first):
+            eng.submit(r)
+            r.wait(timeout=60)
+            assert r.done.is_set()
+            # eager eviction: pages are back the moment the request is
+            # done, while the engine is still up and idling
+            assert eng.pager.used_pages == 0
+        eng.close()
+        eng.join()
+        stats = eng.stats()
+    assert np.array_equal(np.asarray(r_eos.wait(), np.int32),
+                          ref[0, :k_eos])
+    assert r_eos.stopped
+    assert np.array_equal(np.asarray(r_stop.wait(), np.int32),
+                          ref[1, :k_stop])
+    assert r_stop.stopped
+    assert np.array_equal(np.asarray(r_first.wait(), np.int32),
+                          ref[2, :1])
+    assert r_first.stopped and r_first.slot is None
+    assert stats["stopped_early"] == 3
+
+
+@pytest.mark.slow
+def test_batched_prefill_coalesces_bursts(built):
+    """A burst queued before start is prefilled in coalesced rounds (one
+    batched call per round), not one call per request."""
+    from repro.serve import ServeEngine
+
+    b = built
+    reqs = [Request(i, b["prompts"][i], max_new_tokens=3)
+            for i in range(N_REQ)]
+    eng = ServeEngine(b["cfg"], b["params"], slots=3, cache_len=CACHE_LEN,
+                      umt=True, n_cores=4, jit_steps=b["steps"])
+    for r in reqs:
+        eng.submit(r)                   # whole burst queued before start
+    with eng:
+        eng.close()
+        eng.join()
+        stats = eng.stats()
+    for r in reqs:
+        assert np.array_equal(np.asarray(r.wait(), np.int32),
+                              b["ref"][r.rid, :3])
+    # 8 requests, rounds capped at slots=3 -> exactly ceil(8/3) calls
+    assert stats["prefill_calls"] == 3
+    assert stats["prefill_reqs"] == N_REQ
+
+
+@pytest.mark.slow
+def test_dense_legacy_engine_still_exact(built):
+    """page_size=None keeps the seed's dense per-slot reservation (the
+    benchmark A/B leg) — same tokens, no pager."""
+    from repro.serve import make_jit_steps
+
+    b = built
+    dense = make_jit_steps(b["cfg"], cache_len=CACHE_LEN, page_size=None)
+    reqs = [Request(i, b["prompts"][i], max_new_tokens=4)
+            for i in range(5)]
+    stats, pager = _run_engine(b, reqs, page_size=None, jit_steps=dense)
+    for r in reqs:
+        assert np.array_equal(np.asarray(r.wait(), np.int32),
+                              b["ref"][r.rid, :4])
+    assert pager is None
+    assert stats["page_size"] is None
 
 
 @pytest.mark.slow
 def test_oversized_request_fails_loudly(built):
     """A request that cannot fit the pool cache fails its prefill; the
     failure lands on the request (wait re-raises) instead of returning an
-    empty token list or hanging join()."""
-    from repro.serve import ServeEngine
-
+    empty token list or hanging join() — and it cannot take down the
+    valid requests coalesced into the same round."""
     b = built
-    with ServeEngine(b["cfg"], b["params"], slots=2,
-                     cache_len=b["cache_len"], umt=True, n_cores=4,
-                     jit_steps=b["steps"]) as eng:
-        bad = Request(0, b["prompts"][0], max_new_tokens=b["cache_len"])
-        good = Request(1, b["prompts"][1], max_new_tokens=2)
-        eng.submit(bad)
-        eng.submit(good)
-        eng.close()
-        eng.join()                      # must not hang on the failure
+    bad = Request(0, b["prompts"][0], max_new_tokens=CACHE_LEN)
+    good = Request(1, b["prompts"][1], max_new_tokens=2)
+    stats, pager = _run_engine(b, [bad, good], slots=2)
     assert bad.done.is_set() and bad.error is not None
     with pytest.raises(ValueError, match="exceeds cache_len"):
         bad.wait()
     assert np.array_equal(np.asarray(good.wait(), np.int32),
                           b["ref"][1, :2])
+    assert pager.used_pages == 0
 
 
 @pytest.mark.slow
@@ -150,7 +328,7 @@ def test_engine_response_sink_and_weights_load_task(built):
         loaded.append(True)
         return b["params"]
 
-    with ServeEngine(b["cfg"], load, slots=2, cache_len=b["cache_len"],
+    with ServeEngine(b["cfg"], load, slots=2, cache_len=CACHE_LEN,
                      umt=True, n_cores=4, jit_steps=b["steps"],
                      response_sink=seen.append) as eng:
         reqs = [Request(i, b["prompts"][i], max_new_tokens=3)

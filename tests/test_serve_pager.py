@@ -1,0 +1,138 @@
+"""Adversarial PagePool unit tests (host-only, fast): exhaustion is
+all-or-nothing, freed pages are reusable by any other slot, fragmentation
+after heavy churn never corrupts the free list, and the page_size=1
+degenerate config works.  Engine-level exhaustion/churn equivalence lives
+in tests/test_serve_engine.py."""
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.serve import GARBAGE_PAGE, PagePool, auto_page_size
+from repro.steps import chunkable, paged_names
+
+
+def test_alloc_never_hands_out_garbage_page():
+    p = PagePool(num_pages=9, page_size=4)
+    ids = p.alloc(8)
+    assert ids is not None and len(ids) == 8
+    assert GARBAGE_PAGE not in ids
+    assert sorted(ids) == list(range(1, 9))
+    assert p.free_pages == 0
+
+
+def test_exhaustion_is_all_or_nothing():
+    p = PagePool(num_pages=5, page_size=2)      # 4 usable
+    a = p.alloc(3)
+    assert a is not None
+    # only 1 free: a request for 2 must get nothing, not a partial grant
+    before = p.free_pages
+    assert p.alloc(2) is None
+    assert p.free_pages == before == 1
+    assert p.alloc_failures == 1
+    assert p.alloc(1) is not None               # exact fit still works
+
+
+def test_free_then_realloc_reuses_pages_for_another_slot():
+    p = PagePool(num_pages=4, page_size=1)      # 3 usable
+    slot_a = p.alloc(3)
+    assert p.alloc(1) is None                   # full
+    p.free(slot_a)
+    slot_b = p.alloc(3)
+    assert sorted(slot_b) == sorted(slot_a)     # same physical pages
+    assert p.used_pages == 3
+
+
+def test_fragmentation_after_heavy_churn():
+    rng = np.random.default_rng(0)
+    p = PagePool(num_pages=33, page_size=2)     # 32 usable
+    held = []
+    for _ in range(500):
+        if held and (rng.random() < 0.5 or p.free_pages < 4):
+            p.free(held.pop(rng.integers(len(held))))
+        else:
+            got = p.alloc(int(rng.integers(1, 5)))
+            if got is not None:
+                held.append(got)
+        # invariants under churn: no garbage page, no duplicates anywhere
+        live = [i for ids in held for i in ids]
+        assert GARBAGE_PAGE not in live
+        assert len(live) == len(set(live))
+        assert p.used_pages == len(live)
+    # a large alloc spanning many non-contiguous freed regions still works
+    for ids in held:
+        p.free(ids)
+    big = p.alloc(32)
+    assert big is not None and len(set(big)) == 32
+
+
+def test_page_size_one_degenerate_config():
+    p = PagePool(num_pages=17, page_size=1)
+    assert p.pages_for(13) == 13
+    assert p.pages_for(1) == 1
+    assert p.pages_for(0) == 0
+    ids = p.alloc(16)
+    assert ids is not None and p.alloc(1) is None
+    p.free(ids[:7])
+    assert p.free_pages == 7
+
+
+def test_pages_for_rounds_up():
+    p = PagePool(num_pages=9, page_size=4)
+    assert p.pages_for(1) == 1
+    assert p.pages_for(4) == 1
+    assert p.pages_for(5) == 2
+    assert p.pages_for(8) == 2
+    assert p.pages_for(9) == 3
+
+
+def test_stats_and_peak_tracking():
+    p = PagePool(num_pages=9, page_size=4)
+    a = p.alloc(5)
+    p.free(a[:2])
+    p.alloc(1)
+    s = p.stats()
+    assert s["pages_capacity"] == 8
+    assert s["pages_used"] == 4
+    assert s["pages_used_peak"] == 5
+    assert s["page_allocs"] == 2
+
+
+def test_double_free_and_bad_ids_are_loud():
+    p = PagePool(num_pages=5, page_size=2)
+    ids = p.alloc(2)
+    p.free(ids)
+    with pytest.raises(AssertionError):
+        p.free(ids)                             # double free
+    with pytest.raises(AssertionError):
+        p.free([GARBAGE_PAGE])                  # garbage page
+    with pytest.raises(AssertionError):
+        p.free([99])                            # out of range
+
+
+def test_auto_page_size_picks_largest_divisor():
+    assert auto_page_size(64) == 8
+    assert auto_page_size(14) == 7
+    assert auto_page_size(12) == 6
+    assert auto_page_size(13) == 1              # prime: degenerate
+    assert auto_page_size(4) == 4
+
+
+def test_paged_names_and_chunkable_predicates():
+    qwen = get("qwen2.5-14b").tiny()
+    mixtral = get("mixtral-8x7b").tiny()
+    jamba = get("jamba-v0.1-52b").tiny()
+    mla = get("minicpm3-4b").tiny()
+    assert paged_names(qwen.pattern[0], 16) == {"k", "v"}
+    assert paged_names(mla.pattern[0], 16) == {"ckv", "krope"}
+    # mixtral tiny window (4096) >= cache_len: ring is linear -> paged
+    assert paged_names(mixtral.pattern[0], 16) == {"k", "v"}
+    # a true ring (window < cache_len) stays dense
+    assert paged_names(mixtral.pattern[0], 8192) == frozenset()
+    assert all(paged_names(s, 16) == frozenset() for s in jamba.pattern
+               if s.kind == "ssm")
+    assert chunkable(qwen, 16)
+    assert chunkable(mla, 16)
+    assert not chunkable(mixtral, 16)           # MoE routing is extent-bound
+    assert not chunkable(jamba, 16)             # SSM chunk boundaries
+    assert chunkable(get("internvl2-2b").tiny(), 20)
+    assert chunkable(get("musicgen-large").tiny(), 16)

@@ -303,6 +303,60 @@ def test_leader_scan_rate_limit_disabled_still_schedules():
     assert s["leader_scans"] >= 1
 
 
+def test_leader_scan_min_gap_zero_scans_every_wakeup():
+    """The scan_min_gap=0 edge, asserted: with the rate limit off, every
+    Leader wakeup (and every timeout poll) passes the since >= 0 gate, so
+    leader_scans can never fall below leader_wakeups — except the final
+    shutdown wakeup, which breaks out before the scan."""
+    with UMTRuntime(n_cores=2, umt=True, scan_min_gap=0.0) as rt:
+        hs = [rt.submit(lambda: io.sleep(0.001)) for _ in range(50)]
+        [h.wait() for h in hs]
+        rt.wait_all()
+        s = rt.stats()
+    assert s["leader_wakeups"] >= 1
+    assert s["leader_scans"] >= s["leader_wakeups"] - 1, s
+
+
+def test_leader_drains_bounded_by_wakeups():
+    """The batched-drain loop runs at most 4 coalescing rounds per wakeup
+    and each round drains each core at most once, so leader_drains is
+    bounded by 4 * n_cores per wakeup — the stat can prove drains are
+    coalesced, not per-event."""
+    n_cores = 2
+    with UMTRuntime(n_cores=n_cores, umt=True) as rt:
+        hs = [rt.submit(lambda: io.sleep(0.001)) for _ in range(100)]
+        [h.wait() for h in hs]
+        rt.wait_all()
+        s = rt.stats()
+    assert s["leader_drains"] >= 1
+    assert s["leader_drains"] <= 4 * n_cores * s["leader_wakeups"], s
+
+
+def test_leader_scan_min_gap_large_scans_at_most_twice():
+    """A huge scan_min_gap collapses scanning to the initial pass (the
+    first wakeup always scans — last_scan starts at 0): the rate limiter
+    is a hard gate, not advisory."""
+    with UMTRuntime(n_cores=2, umt=True, scan_min_gap=100.0) as rt:
+        hs = [rt.submit(lambda: io.sleep(0.001)) for _ in range(30)]
+        [h.wait() for h in hs]
+        rt.wait_all()
+        s = rt.stats()
+    assert s["leader_scans"] <= 2, s
+
+
+def test_leader_stats_stay_zero_on_baseline():
+    """umt=False never starts the Leader: its stats must stay zero (the
+    A/B legs in benchmarks would otherwise be misattributed)."""
+    with UMTRuntime(n_cores=2, umt=False) as rt:
+        hs = [rt.submit(lambda: io.sleep(0.001)) for _ in range(10)]
+        [h.wait() for h in hs]
+        rt.wait_all()
+        s = rt.stats()
+    assert s["leader_wakeups"] == 0
+    assert s["leader_drains"] == 0
+    assert s["leader_scans"] == 0
+
+
 # ------------------------------------------------------------ runtime basic
 def test_runtime_runs_tasks_and_results():
     with UMTRuntime(n_cores=2) as rt:
