@@ -1,0 +1,148 @@
+"""Minimal standalone repro: async-dispatch buffer recycling on jax CPU.
+
+Observed on jax 0.4.37 (CPU backend, 2-vCPU container) while building a
+continuous-batching serve engine: a device buffer whose **last Python
+reference drops can be recycled while a dispatched-but-pending
+computation still reads it**, and the pending computation then sees
+whatever the allocator wrote into that memory next.  In the engine it
+surfaced as masked-0 / garbage greedy tokens under load; the workaround
+is to pin every pre-rebind state version until a device sync proves the
+dispatch chain has drained (``repro.serve.kvstate.KVState``).
+
+This script reproduces the *engine's exact usage pattern* with no
+engine code, for filing upstream:
+
+  1. a jitted step ``cache, tok, mask -> new_cache, new_tok`` is
+     dispatched back-to-back WITHOUT any host sync, rebinding
+     ``cache``/``tok`` each tick — so every old version's last Python
+     reference drops while the next computation (which reads it) may
+     still be pending;
+  2. ``mask`` is a freshly-built ``jnp.array`` **temporary** whose only
+     reference drops the moment the call returns (the engine passed its
+     active-slot mask this way): a masked-out lane emits exactly 0, so
+     a recycled-then-zeroed mask buffer shows up as spurious 0 tokens —
+     precisely the corruption signature observed in the engine;
+  3. per tick, a **lazy slice** ``tok[row]`` of the pre-rebind token
+     array is kept (the engine kept per-slot token streams this way) —
+     its gather is also dispatched against a buffer whose backing array
+     loses its last reference on the next rebind;
+  4. host-side allocation churn runs between ticks to encourage the
+     allocator to reuse any prematurely freed block;
+  5. after a final sync, every kept slice is compared against the
+     closed-form expectation (the step is exact integer arithmetic, so
+     any mismatch is memory corruption, not float noise).
+
+The failure is timing/allocator dependent: the script makes many
+attempts and reports REPRODUCED with the first corrupt tick, or NOT
+REPRODUCED for this run.  Holding a reference to every pre-rebind
+version (``--pin``, the engine's workaround) makes it disappear.
+
+Usage::
+
+    python examples/repro_buffer_lifetime.py            # try to repro
+    python examples/repro_buffer_lifetime.py --pin      # workaround on
+    python examples/repro_buffer_lifetime.py --attempts 50 --ticks 64
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def make_step(width: int):
+    @jax.jit
+    def step(cache, tok, mask):
+        # enough FLOPs that executions queue up behind dispatch, with an
+        # exact integer token recurrence riding on top:
+        # tok_k[row] = k + row while mask[row] (a masked lane emits 0 —
+        # the engine's dead-slot convention, and the corruption's shape)
+        cache = cache @ cache * jnp.float32(1e-6) + jnp.float32(1.0)
+        coupled = (jnp.sum(cache[:, :1], axis=1) * 0).astype(jnp.int32)
+        nxt = tok + 1 + coupled[: tok.shape[0]]
+        return cache, jnp.where(mask, nxt, 0)
+
+    return step
+
+
+def attempt(step, *, slots, width, ticks, churn_kb, pin, rng):
+    cache = jnp.zeros((width, width), jnp.float32)
+    tok = jnp.arange(slots, dtype=jnp.int32)
+    host_mask = np.ones((slots,), bool)
+    slices = []          # lazy per-row slices of pre-rebind token arrays
+    pinned = []          # --pin: the engine's workaround
+    garbage = []
+    for _ in range(ticks):
+        # the mask temporary's only reference drops on return — if its
+        # buffer recycles (and is zero/garbage-filled) before the
+        # pending step reads it, lanes go masked-out -> 0 tokens
+        mask = jnp.array(host_mask)
+        cache, tok = step(cache, tok, mask)  # old versions' refs drop
+        row = int(rng.integers(slots))
+        slices.append((row, tok[row]))   # lazy gather against `tok`
+        if pin:
+            pinned.append((cache, tok, mask))
+        del mask
+        # allocation churn: freshly written host->device arrays grab
+        # any prematurely recycled block (zeros first — a recycled mask
+        # read as zeros is the masked-0 signature)
+        garbage.append(jnp.zeros((churn_kb * 256,), jnp.int32))
+        if len(garbage) > 8:
+            garbage.pop(0)
+    jax.block_until_ready(tok)
+    bad = []
+    for k, (row, s) in enumerate(slices):
+        want = k + 1 + row               # exact: tok_k[row] = (k+1) + row
+        got = int(np.asarray(s))
+        if got != want:
+            bad.append((k, row, got, want))
+    del pinned
+    return bad
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="repro: pending async computation reads a recycled "
+                    "buffer after its last Python reference dropped")
+    ap.add_argument("--attempts", type=int, default=20)
+    ap.add_argument("--ticks", type=int, default=48,
+                    help="dispatch-chain depth per attempt (no sync)")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--width", type=int, default=384,
+                    help="cache matrix side (bigger => deeper pending "
+                         "queue)")
+    ap.add_argument("--churn-kb", type=int, default=64)
+    ap.add_argument("--pin", action="store_true",
+                    help="keep a reference to every pre-rebind version "
+                         "(the engine's workaround) — corruption should "
+                         "never occur")
+    args = ap.parse_args(argv)
+
+    print(f"jax {jax.__version__} on {jax.devices()}", flush=True)
+    step = make_step(args.width)
+    rng = np.random.default_rng(0)
+    for i in range(args.attempts):
+        bad = attempt(step, slots=args.slots, width=args.width,
+                      ticks=args.ticks, churn_kb=args.churn_kb,
+                      pin=args.pin, rng=rng)
+        if bad:
+            k, row, got, want = bad[0]
+            print(f"REPRODUCED on attempt {i}: tick {k} row {row} read "
+                  f"{got}, expected {want} ({len(bad)} corrupt slices "
+                  "total) — a pending computation read a recycled "
+                  "buffer", flush=True)
+            return 1
+    print(f"NOT REPRODUCED in {args.attempts} attempts"
+          + (" (workaround --pin active, as expected)" if args.pin else
+             " — timing/allocator dependent; seen under serve load on a "
+             "2-vCPU container (see repro.serve.kvstate); try more "
+             "--attempts / bigger --width"),
+          flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -22,9 +22,11 @@ Sharded scheduler fast path (``sched="sharded"``, the default)
 --------------------------------------------------------------
 The ready queue is sharded per core (``ShardedReadyQueue``): producers
 push to their own core's deque, consumers pop their local deque FIFO and
-steal the oldest task from a neighbour only when local is dry — the
-user-space analogue of scx/sched_ext per-CPU dispatch queues with a
-load-balancing hook.  Everything the hot path touches is per-core: each
+steal from a neighbour only when local is dry — the oldest task, or
+*half* the victim's deque when the imbalance is large (thief dry, victim
+holding ``steal_half_min``+ tasks), so a burst fanned out on one core
+spreads in O(log) steals — the user-space analogue of scx/sched_ext
+per-CPU dispatch queues with a load-balancing hook.  Everything the hot path touches is per-core: each
 shard has its own lock, the per-core ready counters have per-core locks,
 and ``len(ready)`` reads an approximate lock-free ``AtomicCounter``.
 ``push_ready`` is O(1): it drains and idle-checks only the *target*
@@ -636,6 +638,12 @@ class UMTRuntime:
         s = self.tracer.stats(self.n_cores)
         s.update(self.stats_extra)
         s["steals"] = (self.ready.steals.value if self.sharded else 0)
+        # batch steals: a dry worker taking half an overloaded victim's
+        # deque in one pass (see ShardedReadyQueue.steal)
+        s["steal_batches"] = (self.ready.steal_batches.value
+                              if self.sharded else 0)
+        s["steal_batch_tasks"] = (self.ready.steal_batch_tasks.value
+                                  if self.sharded else 0)
         s["n_workers"] = len(self._workers)
         s["umt"] = self.umt
         s["sched"] = self.sched

@@ -155,16 +155,29 @@ class ShardedReadyQueue:
     queue).  Each shard has its own lock, so same-core push/pop never
     contends with other cores; ``len()`` reads an approximate
     ``AtomicCounter`` and takes no lock at all.
+
+    Batch stealing: when the imbalance is large — the thief is dry while
+    the victim holds at least ``steal_half_min`` tasks — the steal takes
+    *half* the victim's deque (oldest half, order preserved) instead of
+    one task: the extra tasks land at the head of the thief's local shard,
+    so a burst fanned out on one core spreads in O(log) steals instead of
+    one steal per task (scx-style load balancing).  Counted by
+    ``steal_batches`` / ``steal_batch_tasks`` (surfaced in runtime
+    stats); the walk order stays nearest-neighbour-first.
     """
 
-    def __init__(self, n_shards: int):
+    def __init__(self, n_shards: int, steal_half_min: int = 4):
         assert n_shards >= 1
+        assert steal_half_min >= 2
         self.n_shards = n_shards
+        self.steal_half_min = steal_half_min
         self._qs = [collections.deque() for _ in range(n_shards)]
         self._locks = [threading.Lock() for _ in range(n_shards)]
         self._approx_len = AtomicCounter()
         self._rr = AtomicCounter()
         self.steals = AtomicCounter()
+        self.steal_batches = AtomicCounter()      # steals that took > 1
+        self.steal_batch_tasks = AtomicCounter()  # extra tasks re-homed
 
     def select_shard(self) -> int:
         """Round-robin home shard for external (non-worker) producers."""
@@ -196,20 +209,44 @@ class ShardedReadyQueue:
         return None
 
     def steal(self, shard: int):
-        """Walk the other shards (nearest neighbour first) and steal the
-        oldest task of the first non-empty one -> (task, victim) or
-        (None, -1)."""
+        """Walk the other shards (nearest neighbour first) and steal from
+        the first non-empty one -> (task, victim) or (None, -1).
+
+        The oldest task is claimed and returned; when the victim still
+        holds ``steal_half_min - 1`` or more after that (large
+        imbalance: the thief was dry), the steal also re-homes the next
+        ``(victim_len // 2) - 1`` oldest tasks onto the thief's shard —
+        half the victim's load moves in one locked pass, FIFO order
+        preserved on both sides."""
         for i in range(1, self.n_shards):
             victim = (shard + i) % self.n_shards
             if not self._qs[victim]:
                 continue
+            moved = ()
             with self._locks[victim]:
-                if self._qs[victim]:
-                    t = self._qs[victim].popleft()
-                    t.state = "claimed"
-                    self._approx_len.add(-1)
-                    self.steals.add(1)
-                    return t, victim
+                vq = self._qs[victim]
+                if not vq:
+                    continue
+                t = vq.popleft()
+                t.state = "claimed"
+                n = len(vq) + 1                     # victim load incl. t
+                if n >= self.steal_half_min:
+                    moved = tuple(vq.popleft() for _ in range(n // 2 - 1))
+            if moved:
+                # tail-append on the (dry) thief shard: keeps the moved
+                # batch's relative FIFO order and never jumps ahead of a
+                # concurrently re-queued surrendered task (push_front),
+                # whose head slot is part of the per-core FIFO contract.
+                # A racing local push may land ahead of the batch — that
+                # only affects cross-shard age order, which stealing
+                # never guaranteed.
+                with self._locks[shard]:
+                    self._qs[shard].extend(moved)
+                self.steal_batches.add(1)
+                self.steal_batch_tasks.add(len(moved))
+            self._approx_len.add(-1)
+            self.steals.add(1)
+            return t, victim
         return None, -1
 
     def __len__(self):

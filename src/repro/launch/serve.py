@@ -89,7 +89,8 @@ def serve_engine(cfg, params, mesh, args):
                      page_size=page_size,
                      num_pages=args.pages if args.pages > 0 else None,
                      prefill_chunk=args.chunk if args.chunk > 0
-                     else None) as eng:
+                     else None,
+                     donate=not args.no_donate) as eng:
         reqs = []
         for i in range(args.requests):
             reqs.append(Request(
@@ -111,6 +112,8 @@ def serve_engine(cfg, params, mesh, args):
         "arch": cfg.name,
         "umt": not args.no_umt,
         "page_size": stats["page_size"],
+        "donate": stats["donate"],
+        "kv_versions": stats["kv_version"],
         "pages_used_peak": stats.get("pages_used_peak"),
         "prefill_calls": stats["prefill_calls"],
         "prefill_chunks": stats["prefill_chunks"],
@@ -152,6 +155,10 @@ def serve(argv=None):
     ap.add_argument("--chunk", type=int, default=0,
                     help="engine: chunked prefill — prompts longer than "
                          "this prefill as cache-append chunks (0 = off)")
+    ap.add_argument("--no-donate", action="store_true",
+                    help="engine: disable buffer donation on the "
+                         "decode/insert/chunk cache argument (the "
+                         "copying legacy path, kept for A/B)")
     args = ap.parse_args(argv)
     if args.requests <= 0:
         args.requests = args.batch

@@ -209,7 +209,14 @@ def _cache_update(c, u, idx):
     """Write the decode-step update ``u`` (B,1,...) into cache ``c``
     (B,Sc,...) at sequence index ``idx`` — scalar (one shared position)
     or (B,) per-slot positions (a batched scatter; rows are independent,
-    so a continuous-batching engine can hold slots at different depths)."""
+    so a continuous-batching engine can hold slots at different depths).
+
+    The update is cast to the cache dtype and the result keeps ``c``'s
+    exact shape — the donation contract (the serve engine donates the
+    cache into the decode jit; an in-place scatter is precisely the op
+    XLA aliases)."""
+    assert u.shape[0] == c.shape[0] and u.shape[2:] == c.shape[2:], (u.shape,
+                                                                    c.shape)
     if jnp.ndim(idx) == 0:
         return jax.lax.dynamic_update_slice(
             c, u.astype(c.dtype), (0, idx) + (0,) * (c.ndim - 2))

@@ -4,7 +4,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from . import attention as attn_mod
-from .layers import mlp_dense, rms_norm
+from .layers import check_cache_invariant, mlp_dense, rms_norm
 from .moe import moe_mlp, moe_mlp_ragged, moe_param_shapes
 from .ssm import ssm_apply, ssm_cache_shapes, ssm_param_shapes
 
@@ -51,6 +51,10 @@ def block_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None,
     out, new_cache = apply_fn(x, p["mixer"], cfg, spec, mode=mode, pos=pos,
                               cache=cache, cache_len=cache_len, pages=pages,
                               attn_extent=attn_extent)
+    if mode in ("decode", "prefill_chunk"):
+        # donation contract: cache-updating modes keep every leaf's
+        # shape/dtype, so the serve jits can alias donated buffers
+        check_cache_invariant(cache, new_cache, f"{spec.kind}/{spec.attn}")
     x = x + out
     aux = jnp.zeros((), jnp.float32)
     if spec.mlp != "none":

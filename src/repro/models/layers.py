@@ -21,6 +21,27 @@ def gated_rms_norm(x, z, w, eps=1e-5):
                     w, eps)
 
 
+# --------------------------------------------------------- cache invariance
+def check_cache_invariant(old, new, where: str = "block"):
+    """Trace-time guard for the donation contract: a cache-updating mode
+    (decode / prefill_chunk) must return every cache leaf with exactly
+    its input shape and dtype, or the serve engine's donated jits
+    (``donate_argnums`` on the cache argument) could not alias the
+    buffers in place and XLA would silently fall back to the full-pool
+    copy donation exists to remove.  Costs nothing at runtime — it runs
+    on tracers, once per compilation."""
+    if old is None or new is None:
+        return new
+    tin, tout = jax.tree.structure(old), jax.tree.structure(new)
+    assert tin == tout, (
+        f"{where}: cache structure changed across update ({tin} -> {tout})")
+    for i, o in zip(jax.tree.leaves(old), jax.tree.leaves(new)):
+        assert i.shape == o.shape and i.dtype == o.dtype, (
+            f"{where}: cache leaf {i.shape}/{i.dtype} -> "
+            f"{o.shape}/{o.dtype} breaks the donation (aliasing) contract")
+    return new
+
+
 # ------------------------------------------------------------------- paging
 def page_gather(pool, table, page_size):
     """Materialise a slot-major dense view of a paged KV pool.

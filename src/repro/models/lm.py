@@ -154,6 +154,14 @@ def forward(params, cfg, tokens, *, mode="train", pos=0, cache=None,
     pos + S).  Bit-exact for any extent (masked lanes are exact zeros);
     without it each chunk pays the full cache_len extent.  want_logits
     (prefill_chunk only): False skips the LM head for non-final chunks.
+
+    Donation contract: in the cache-updating modes ("decode",
+    "prefill_chunk") every cache leaf comes back with exactly its input
+    shape and dtype, each input leaf feeds exactly one in-place update,
+    and ``pos`` stays int32 — so the serve engine's jits can pass
+    ``donate_argnums`` on the cache argument and XLA aliases the whole
+    pool in place (checked per block at trace time, see
+    ``repro.models.layers.check_cache_invariant``).
     """
     dt = jnp.dtype(cfg.dtype)
     x = embed_tokens(tokens, params["embed"], cfg, dt)

@@ -144,7 +144,10 @@ def ssm_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None,
         conv = jax.nn.silu(
             jnp.einsum("bwc,wc->bc", win, p["conv_w"].astype(dt_))
             + p["conv_b"].astype(dt_))[:, None, :]          # (B,1,C)
-        new_conv = win[:, 1:]
+        # dtype pinned to the cache leaf: the serve engine donates the
+        # cache into the decode jit, and a promoted leaf dtype would
+        # break the in-place aliasing contract (silent full copy)
+        new_conv = win[:, 1:].astype(cache["conv"].dtype)
     else:
         conv = _causal_conv(xbc, p["conv_w"].astype(dt_),
                             p["conv_b"].astype(dt_))
@@ -164,7 +167,8 @@ def ssm_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None,
         da = jnp.exp(dt[:, 0] * a_coef)                    # (B,H)
         upd = jnp.einsum("bhn,bhp->bhpn", b_in[:, 0],
                          (xs[:, 0] * dt[:, 0, :, None].astype(dt_)))
-        hst = hst * da[:, :, None, None].astype(hst.dtype) + upd
+        hst = (hst * da[:, :, None, None].astype(hst.dtype)
+               + upd).astype(cache["state"].dtype)   # donation: keep dtype
         hst = shard(hst, "batch", "ssm_heads", None, None)
         y = jnp.einsum("bhn,bhpn->bhp", c_in[:, 0], hst)[:, None]
         new_cache = {"conv": new_conv, "state": hst}

@@ -35,6 +35,21 @@ slots while decode keeps ticking over live slots (``make_decode_step``,
 active-slot masked).  Greedy outputs are bit-identical to the one-shot
 serve path for any arrival order and slot schedule (tested).
 
+Single-owner KV state & buffer donation
+---------------------------------------
+The cache pytree has exactly one owner — :class:`repro.serve.kvstate.
+KVState`, held by the engine — and the decode/insert/chunk jits *donate*
+it (``donate_argnums`` on the cache argument, the default): XLA aliases
+every cache leaf in place, so a decode tick updates the KV pool without
+materialising a full copy (previously the dominant hot-path memcpy).
+Every rebind of the live version goes through ``KVState.commit``, whose
+versioned pinning keeps any buffer a dispatched-but-pending computation
+still reads alive (this backend can recycle such buffers — see
+``examples/repro_buffer_lifetime.py``) and is exclusive with donation: a
+donated version is consumed by the computation that produced its
+successor and is never pinned.  ``donate=False`` keeps the copying
+legacy path as the benchmark A/B leg.
+
 Paged KV cache
 --------------
 The linear attention cache leaves are paged (vLLM-style): physical pages
@@ -72,8 +87,10 @@ The CLI front-end is ``python -m repro.launch.serve --mode engine``
 comparison); the load benchmark is ``python -m benchmarks.serve``.
 """
 from .engine import ServeEngine, auto_page_size, make_jit_steps
+from .kvstate import KVState, alias_safe
 from .pager import GARBAGE_PAGE, PagePool
 from .request import Request, RequestQueue
 
 __all__ = ["ServeEngine", "Request", "RequestQueue", "make_jit_steps",
-           "PagePool", "GARBAGE_PAGE", "auto_page_size"]
+           "KVState", "alias_safe", "PagePool", "GARBAGE_PAGE",
+           "auto_page_size"]

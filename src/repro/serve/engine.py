@@ -9,6 +9,18 @@ request finishes — so KV memory is bounded by *live tokens*, not by
 equal memory than the dense layout.  Bounded cache leaves (SWA rings,
 SSM conv/state) stay dense per-slot rows.
 
+The cache pytree has a **single owner** — :class:`repro.serve.kvstate.
+KVState` — and the decode/insert/chunk jits **donate** it
+(``donate_argnums`` on the cache argument, the default): XLA aliases
+every cache leaf in place, so a decode tick or an insert no longer
+materialises a full copy of the KV pool (the dominant hot-path memcpy
+before this).  ``donate=False`` keeps the copying legacy path as the
+benchmark A/B leg (``benchmarks/serve.py`` measures both).  Rebinding
+the live version goes through :meth:`KVState.commit`, whose versioned
+pinning replaces the old ad-hoc ``_retain`` list — and is exclusive
+with donation: a donated version is consumed by the computation that
+produced its successor, so it is never pinned (asserted, tested).
+
 Prefill is **batched** and **chunked**:
 
   * arrivals are coalesced per scheduling round (``RequestQueue.
@@ -16,9 +28,10 @@ Prefill is **batched** and **chunked**:
     (batch padded to a power of two so jit shapes stay few) — closing the
     burst-throughput gap to the one-shot path's batched prefill;
   * with ``prefill_chunk=C`` set, long prompts prefill as cache-append
-    chunks of ``C`` tokens (Sarathi-style): each chunk is a separate,
-    bounded jit call with a scheduling point in between, so decode ticks
-    interleave instead of stalling behind one long prefill.
+    chunks of ``C`` tokens (Sarathi-style): each chunk runs as its own
+    **continuation task** (re-enqueued per chunk, not a loop inside one
+    task), so concurrent long prefill rounds interleave fairly on a
+    saturated pool and decode ticks slot in between chunks.
 
 Everything I/O- or compute-shaped runs as a UMT task on the runtime:
 
@@ -47,11 +60,10 @@ import time
 import numpy as np
 
 from ..core import UMTRuntime, io
-from ..steps import (chunkable, init_cache, init_paged_slot_cache,
-                     init_slot_cache, make_batched_insert_step,
+from ..steps import (chunkable, init_cache, make_batched_insert_step,
                      make_decode_step, make_prefill_chunk_step,
                      make_prefill_step)
-from .pager import GARBAGE_PAGE, PagePool
+from .kvstate import KVState, alias_safe
 from .request import Request, RequestQueue
 
 try:  # jax is present everywhere we run; guard only for doc tooling
@@ -76,22 +88,37 @@ def auto_page_size(cache_len: int, cap: int = 8) -> int:
 
 
 def make_jit_steps(cfg, mesh=None, cache_len: int = 64, *,
-                   page_size: int | None = None, chunk: bool = False):
+                   page_size: int | None = None, chunk: bool = False,
+                   donate: bool = True):
     """The engine's jitted steps, built once — pass as ``jit_steps`` to
     several ``ServeEngine`` instances (benchmark A/B legs) so XLA compiles
     each step a single time per process.  Returns a dict carrying the
     cache geometry it was built for (the engine cross-checks it).
-    ``page_size=None`` builds the dense (pre-paging) steps."""
+    ``page_size=None`` builds the dense (pre-paging) steps.
+
+    ``donate=True`` (default) puts ``donate_argnums`` on each step's
+    cache argument: insert arg 0 (the pool — never the shared prefill
+    rows), decode arg 1, chunk arg 1.  The producing computation then
+    aliases every cache leaf in place (alias safety is asserted per leaf
+    by the first engine built on the dict), eliminating the per-tick
+    full-pool copy.  ``donate=False`` keeps the copying legacy path as
+    the benchmark A/B leg."""
+    ins = jax.jit(make_batched_insert_step(
+        cfg, mesh, cache_len=cache_len, page_size=page_size),
+        donate_argnums=(0,) if donate else ())
+    dec = jax.jit(make_decode_step(
+        cfg, mesh, cache_len=cache_len, page_size=page_size),
+        donate_argnums=(1,) if donate else ())
     return {
         "cache_len": cache_len,
         "page_size": page_size,
+        "donate": donate,
         "prefill": jax.jit(make_prefill_step(cfg, mesh,
                                              cache_len=cache_len)),
-        "insert": jax.jit(make_batched_insert_step(
-            cfg, mesh, cache_len=cache_len, page_size=page_size)),
-        "decode": jax.jit(make_decode_step(
-            cfg, mesh, cache_len=cache_len, page_size=page_size)),
+        "insert": ins,
+        "decode": dec,
         "chunk": (jax.jit(make_prefill_chunk_step(cfg, mesh, cache_len),
+                          donate_argnums=(1,) if donate else (),
                           static_argnames=("attn_extent", "want_logits"))
                   if chunk else None),
     }
@@ -124,8 +151,14 @@ class ServeEngine:
         per-request footprint.
     prefill_chunk : int, optional
         Chunked prefill: prompts longer than this prefill as cache-append
-        chunks of this many tokens.  Requires a chunk-exact config
-        (``repro.steps.chunkable``) — raises ``ValueError`` otherwise.
+        chunks of this many tokens, one continuation task per chunk.
+        Requires a chunk-exact config (``repro.steps.chunkable``) —
+        raises ``ValueError`` otherwise.
+    donate : bool, optional
+        Buffer donation on the decode/insert/chunk cache argument
+        (default True): the cache is updated in place instead of copied
+        per tick.  Must match ``jit_steps`` when both are given;
+        ``donate=False`` is the measured A/B leg.
     sync_ticks : bool
         Block on each decode tick before timestamping it — makes the
         tick-interval stats measure real compute cadence (benchmarks);
@@ -146,7 +179,7 @@ class ServeEngine:
                  num_pages: int | None = None,
                  prefill_chunk: int | None = None,
                  max_prefill_batch: int | None = None,
-                 sync_ticks: bool = False):
+                 sync_ticks: bool = False, donate: bool | None = None):
         self.cfg = cfg
         self.slots = slots
         self.cache_len = cache_len
@@ -172,10 +205,16 @@ class ServeEngine:
                 page_size = jit_steps["page_size"]
             assert jit_steps["page_size"] == page_size, (
                 "jit_steps were built for a different page_size")
+            steps_donate = jit_steps.get("donate", False)
+            assert donate is None or donate == steps_donate, (
+                "jit_steps were built for donate="
+                f"{steps_donate}, engine asked for donate={donate}")
+            donate = steps_donate
         elif page_size == "auto":
             page_size = auto_page_size(cache_len)
         self.page_size: int | None = page_size
         self.paged = page_size is not None
+        self.donate = True if donate is None else donate
 
         self.prefill_chunk = prefill_chunk
         if prefill_chunk is not None:
@@ -191,7 +230,8 @@ class ServeEngine:
         if jit_steps is None:
             jit_steps = make_jit_steps(cfg, mesh, cache_len,
                                        page_size=page_size,
-                                       chunk=prefill_chunk is not None)
+                                       chunk=prefill_chunk is not None,
+                                       donate=self.donate)
         self.prefill = jit_steps["prefill"]
         self.insert = jit_steps["insert"]
         self.decode = jit_steps["decode"]
@@ -199,6 +239,7 @@ class ServeEngine:
         if prefill_chunk is not None and self.chunk is None:
             self.chunk = jax.jit(
                 make_prefill_chunk_step(cfg, mesh, cache_len),
+                donate_argnums=(1,) if self.donate else (),
                 static_argnames=("attn_extent", "want_logits"))
 
         self._params = None if callable(params) else params
@@ -209,22 +250,13 @@ class ServeEngine:
             self._params_ready.set()
 
         dt = jnp.dtype(cfg.dtype)
-        if self.paged:
-            assert cache_len % page_size == 0, (
-                f"page_size {page_size} must divide cache_len {cache_len}")
-            self.pages_per_slot = cache_len // page_size
-            if num_pages is None:
-                # dense-equivalent token capacity (+ the garbage page)
-                num_pages = slots * self.pages_per_slot + 1
-            self.pager = PagePool(num_pages, page_size)
-            self.cache = init_paged_slot_cache(cfg, slots, cache_len, dt,
-                                               page_size, num_pages)
-            self._table = np.zeros((slots, self.pages_per_slot), np.int32)
-            self._table_dev = jnp.array(self._table)
-        else:
-            self.pager = None
-            self.cache = init_slot_cache(cfg, slots, cache_len, dt)
-            self._table = self._table_dev = None
+        # single owner of the cache pytree (and, paged, of the block
+        # tables + page free-list): every rebind goes through kv.commit,
+        # every buffer a pending dispatch may read is pinned in kv
+        self.kv = KVState(cfg, slots, cache_len, dt, page_size=page_size,
+                          num_pages=num_pages)
+        self.pager = self.kv.pager
+        self.pages_per_slot = self.kv.pages_per_slot
         extra = ((cfg.n_codebooks,) if cfg.frontend == "audio_codebooks"
                  else ())
         # hot-path state is device-resident: the decode loop never syncs
@@ -239,18 +271,6 @@ class ServeEngine:
         self._active_dev = jnp.array(self._active)
         self._slot_req: list[Request | None] = [None] * slots
         self._inserts: collections.deque = collections.deque()
-        # strong refs to every pre-rebind state version (cache, tokens,
-        # masks, tables, prefill rows) that a dispatched-but-pending
-        # computation may still read: on this backend a device buffer
-        # whose last Python reference drops can be recycled while an
-        # async computation still needs it, and the computation then
-        # reads whatever was written there next (observed as masked-0 /
-        # garbage tokens under load).  Cleared at every point where a
-        # device sync proves the chain has drained, and bounded by
-        # _retain_flush — each entry can pin a whole cache version, so an
-        # unbounded list is a memory leak with periodic allocator stalls.
-        self._retain: list = []
-        self._retain_max = 64
         self._lock = threading.Lock()          # inserts/counters only
         self._pending_prefills = 0
         self._intake_done = False
@@ -276,7 +296,54 @@ class ServeEngine:
         self.stats_prefill_calls = 0
         self.stats_prefill_reqs = 0
         self.stats_prefill_chunks = 0
+        self.stats_prefill_chunk_tasks = 0
         self.stats_stopped_early = 0
+
+        # donation sanity, once per jit_steps dict (abstract eval only,
+        # no compile): every cache leaf must come out of each donating
+        # step with its input shape/dtype, or XLA could not alias the
+        # donated buffer and would silently keep the full-pool copy
+        if self.donate and not jit_steps.get("_alias_ok"):
+            self._assert_alias_safe()
+            jit_steps["_alias_ok"] = True
+
+    def _assert_alias_safe(self):
+        from ..models.lm import cache_meta, meta_shape_structs, param_meta
+
+        cfg = self.cfg
+        ps = meta_shape_structs(param_meta(cfg),
+                                jnp.dtype(cfg.param_dtype))
+        kv, i32 = self.kv, jnp.int32
+        scalar = jax.ShapeDtypeStruct((), i32)
+        if self.paged:
+            _, out_c = jax.eval_shape(self.decode, ps, kv.cache,
+                                      self._tokens, self._active_dev,
+                                      kv.table_dev)
+        else:
+            _, out_c = jax.eval_shape(self.decode, ps, kv.cache,
+                                      self._tokens, self._active_dev)
+        alias_safe(kv.cache, out_c, "decode")
+        rows = meta_shape_structs(cache_meta(cfg, 1, self.cache_len),
+                                  jnp.dtype(cfg.dtype))
+        if self.paged:
+            trow = jax.ShapeDtypeStruct((self.pages_per_slot,), i32)
+            out_c = jax.eval_shape(self.insert, kv.cache, rows, scalar,
+                                   scalar, trow)
+        else:
+            out_c = jax.eval_shape(self.insert, kv.cache, rows, scalar,
+                                   scalar)
+        alias_safe(kv.cache, out_c, "insert")
+        if self.chunk is not None:
+            tok = jax.ShapeDtypeStruct(
+                (1, 1) + ((cfg.n_codebooks,)
+                          if cfg.frontend == "audio_codebooks" else ()),
+                i32)
+            out_c, _ = jax.eval_shape(
+                lambda p, rc, t, off: self.chunk(
+                    p, rc, t, off, None, attn_extent=self.cache_len,
+                    want_logits=False),
+                ps, rows, tok, scalar)
+            alias_safe(rows, out_c, "chunk")
 
     # ------------------------------------------------------------ lifecycle
     def start(self):
@@ -430,7 +497,12 @@ class ServeEngine:
         is padded to the next power of two (repeating the last row) so
         the jit sees a handful of shapes, not one per burst size —
         per-row outputs are extent-invariant, so padding cannot perturb
-        the real rows."""
+        the real rows.
+
+        Long prompts under ``prefill_chunk`` do not prefill here: the
+        group is handed to a chunk *continuation chain* (one UMT task
+        per chunk, see :meth:`_prefill_chunk_task`) and leaves
+        ``remaining`` — the chain owns its accounting from then on."""
         bg = len(grp)
         toks = np.stack([np.asarray(r.tokens) for r in grp])
         patches = None
@@ -448,9 +520,90 @@ class ServeEngine:
 
         if (self.prefill_chunk is not None
                 and grp[0].total_len > self.prefill_chunk):
-            rows_cache, logits = self._prefill_chunked(tj, pj)
-        else:
-            rows_cache, logits = self.prefill(self._params, tj, pj)
+            st = {"rows_cache": init_cache(self.cfg, bpad, self.cache_len,
+                                           jnp.dtype(self.cfg.dtype)),
+                  "off": 0, "c0": 0, "first": True, "chunks": 0,
+                  "unaccounted": list(grp)}
+            for r in grp:
+                remaining.remove(r)
+            try:
+                self.rt.submit(self._prefill_chunk_task, grp, tj, pj, st,
+                               name=f"serve.prefill.chunk:{grp[0].rid}@0")
+            except BaseException as e:          # noqa: BLE001
+                for r in st["unaccounted"]:     # chain never started
+                    self._finish_failed(r, e)
+                st["unaccounted"] = []
+                raise
+            return
+        rows_cache, logits = self.prefill(self._params, tj, pj)
+        self._account_prefilled(grp, remaining, rows_cache, logits)
+
+    def _prefill_chunk_task(self, grp, tj, pj, st):
+        """One bounded cache-append chunk of a chunked prefill round,
+        **re-enqueued as a continuation task per chunk**: the ready
+        queue interleaves two concurrent long rounds' chunk tasks fairly
+        on a saturated pool, where a loop inside one task would hold its
+        worker for the whole prefill (ROADMAP "chunked prefill across
+        rounds").  The chain owns the group's failure accounting —
+        anything unaccounted fails loudly if a chunk raises."""
+        try:
+            plen = tj.shape[1]
+            npatch = 0 if pj is None else pj.shape[1]
+            c = self.prefill_chunk
+            c0, off, first = st["c0"], st["off"], st["first"]
+            c1 = min(c0 + c, plen)
+            covered = off + (c1 - c0) + (npatch if first else 0)
+            # static extent bucket (multiple of the chunk size, so jits
+            # are reused across rounds): total attention FLOPs stay at
+            # the one-shot level; non-final chunks skip the LM head
+            ext = min(self.cache_len, -(-covered // c) * c)
+            old_rows = st["rows_cache"]
+            # dispatch temporaries bound as locals: the chunk slice and
+            # offset must stay referenced until the sync below, or a
+            # pending dispatch could read their recycled buffers (the
+            # documented backend bug — same rule as kv.pin in
+            # _do_inserts)
+            chunk_toks, off_dev = tj[:, c0:c1], jnp.int32(off)
+            rows_cache, logits = self.chunk(
+                self._params, old_rows, chunk_toks, off_dev,
+                pj if first else None, attn_extent=ext,
+                want_logits=c1 >= plen)
+            st.update(rows_cache=rows_cache, off=covered, c0=c1,
+                      first=False, chunks=st["chunks"] + 1)
+            # complete the chunk before the next task dispatches it:
+            # back-to-back async chunks would occupy the device queue
+            # exactly like one long prefill — the bounded gap (plus the
+            # task boundary, a scheduling point like any other) is where
+            # decode ticks interleave.  ``old_rows`` stays referenced
+            # until this sync, so the chunk chain (donated or copied)
+            # never drops a version a pending dispatch still reads.
+            jax.block_until_ready(rows_cache["pos"])
+            del old_rows, chunk_toks, off_dev
+            with self._lock:
+                self.stats_prefill_chunk_tasks += 1
+            if c1 < plen:
+                self.rt.submit(self._prefill_chunk_task, grp, tj, pj, st,
+                               name=f"serve.prefill.chunk:"
+                                    f"{grp[0].rid}@{c1}")
+                return
+            with self._lock:            # rounds run on concurrent workers
+                self.stats_prefill_chunks += st["chunks"]
+            self._account_prefilled(grp, st["unaccounted"], rows_cache,
+                                    logits)
+        except BaseException as e:              # noqa: BLE001
+            for r in list(st["unaccounted"]):
+                self._finish_failed(r, e)
+            st["unaccounted"] = []
+            raise
+        finally:
+            self._work.set()
+
+    def _account_prefilled(self, grp, remaining, rows_cache, logits):
+        """Hand a prefilled group to the decode driver: stamp TTFT, emit
+        the prefill token, finish done-at-prefill requests, queue the
+        rest for insertion.  Removes each request from ``remaining`` the
+        moment it is accounted, so a mid-group failure fails exactly the
+        unaccounted ones."""
         t0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         # force the first token before stamping TTFT — dispatch is
         # async, so a monotonic() above the sync would under-report
@@ -459,7 +612,7 @@ class ServeEngine:
         now = time.monotonic()
         with self._lock:                # rounds run on concurrent workers
             self.stats_prefill_calls += 1
-            self.stats_prefill_reqs += bg
+            self.stats_prefill_reqs += len(grp)
         for i, r in enumerate(grp):
             r.t_first = now
             remaining.remove(r)
@@ -484,46 +637,6 @@ class ServeEngine:
                     self._inserts.append((r, rows_cache, i, t0))
                     self._pending_prefills -= 1
         self._work.set()
-
-    def _prefill_chunked(self, tj, pj):
-        """Cache-append chunked prefill of one group: bounded jit calls
-        with a scheduling point between chunks, so a long prompt never
-        monopolises its core for the whole prefill."""
-        bpad, plen = tj.shape[0], tj.shape[1]
-        dt = jnp.dtype(self.cfg.dtype)
-        rows_cache = init_cache(self.cfg, bpad, self.cache_len, dt)
-        npatch = 0 if pj is None else pj.shape[1]
-        c = self.prefill_chunk
-        off = c0 = 0
-        first = True
-        logits = None
-        chunks_done = 0
-        while c0 < plen:
-            c1 = min(c0 + c, plen)
-            covered = off + (c1 - c0) + (npatch if first else 0)
-            # static extent bucket (multiple of the chunk size, so jits
-            # are reused across rounds): total attention FLOPs stay at
-            # the one-shot level; non-final chunks skip the LM head
-            ext = min(self.cache_len, -(-covered // c) * c)
-            rows_cache, logits = self.chunk(
-                self._params, rows_cache, tj[:, c0:c1], jnp.int32(off),
-                pj if first else None, attn_extent=ext,
-                want_logits=c1 >= plen)
-            off = covered
-            first = False
-            c0 = c1
-            chunks_done += 1
-            # complete the chunk before dispatching the next: back-to-back
-            # async chunks would occupy the device queue exactly like one
-            # long prefill, and decode ticks would still wait out the
-            # whole round — the bounded gap is where ticks interleave.
-            # Then a scheduling point: the prefill worker checks its
-            # core's counters, exactly like any other task boundary.
-            jax.block_until_ready(rows_cache["pos"])
-            self.rt.taskyield()
-        with self._lock:                # rounds run on concurrent workers
-            self.stats_prefill_chunks += chunks_done
-        return rows_cache, logits
 
     @staticmethod
     def _hit_stop(req: Request) -> bool:
@@ -575,6 +688,19 @@ class ServeEngine:
         io.call(self.response_sink, req)      # monitored response write
 
     # ------------------------------------------------------- decode driver
+    def _rebind_tokens(self, new_tokens):
+        """Displace the device token row: the old version is an argument
+        of a pending dispatch (the decode that produced ``new_tokens``,
+        or the next tick), so it is pinned, not dropped."""
+        self.kv.pin(self._tokens)
+        self._tokens = new_tokens
+
+    def _rebind_active(self):
+        """Refresh the device active mask from the host one, pinning the
+        displaced version (same rule as :meth:`_rebind_tokens`)."""
+        self.kv.pin(self._active_dev)
+        self._active_dev = jnp.array(self._active)
+
     def _do_inserts(self):
         """Admit prefilled rows into free slots, strictly FIFO.  Paged:
         the head reserves its worst-case pages first — if the pool cannot
@@ -591,48 +717,34 @@ class ServeEngine:
                 req, rows_cache, row, t0 = self._inserts[0]
             ids = None
             if self.paged:
-                need = self.pager.pages_for(req.total_len + req.max_new - 1)
-                ids = self.pager.alloc(need)
+                ids = self.pager.reserve(req.total_len + req.max_new - 1)
                 if ids is None:
                     return              # admission blocked on free pages
             with self._lock:
                 self._inserts.popleft()
             s = int(free[0])
-            # pre-rebind versions are args of pending work: keep them
-            # referenced (see _retain)
-            self._retain.append((self.cache, self._tokens,
-                                 self._active_dev, self._table_dev,
-                                 rows_cache, t0))
+            kv = self.kv
             row_dev, slot_dev = jnp.int32(row), jnp.int32(s)
+            # dispatch temporaries the pending insert reads whose Python
+            # refs drop at the end of this iteration: pin until a sync
+            kv.pin(rows_cache, t0, row_dev, slot_dev)
             if self.paged:
                 req.pages = ids
-                self._table[s, :] = GARBAGE_PAGE
-                self._table[s, :len(ids)] = ids
-                self._table_dev = jnp.array(self._table)
-                table_row = jnp.array(self._table[s])
-                self._retain.append((row_dev, slot_dev, table_row))
-                self.cache = self.insert(self.cache, rows_cache, row_dev,
-                                         slot_dev, table_row)
+                table_row = kv.bind_slot_pages(s, ids)
+                kv.pin(table_row)
+                new_cache = self.insert(kv.cache, rows_cache, row_dev,
+                                        slot_dev, table_row)
             else:
-                self._retain.append((row_dev, slot_dev))
-                self.cache = self.insert(self.cache, rows_cache, row_dev,
-                                         slot_dev)
-            self._tokens = self._tokens.at[s].set(t0[row])
+                new_cache = self.insert(kv.cache, rows_cache, row_dev,
+                                        slot_dev)
+            # donated: the displaced version was consumed by the insert
+            # (never pinned); copied: commit pins it for pending readers
+            kv.commit(new_cache, donated=self.donate)
+            self._rebind_tokens(self._tokens.at[s].set(t0[row]))
             self._active[s] = True
-            self._active_dev = jnp.array(self._active)
+            self._rebind_active()
             self._slot_req[s] = req
             req.slot = s
-
-    def _retain_flush(self, synced: bool):
-        """Drop the pinned pre-rebind state versions.  ``synced=True``
-        when the caller just forced the chain (every retained buffer has
-        executed); otherwise flush only past the depth cap, paying one
-        explicit drain first."""
-        if synced:
-            self._retain.clear()
-        elif len(self._retain) > self._retain_max:
-            jax.block_until_ready(self.cache["pos"])
-            self._retain.clear()
 
     def _release_slot(self, s: int):
         """Free a slot and, when paged, its pages — immediately, so the
@@ -643,20 +755,21 @@ class ServeEngine:
         self._active[s] = False
         self._slot_req[s] = None
         if self.paged and req.pages is not None:
-            self._table[s, :] = GARBAGE_PAGE
+            self.kv.release_slot_pages(s)
             self.pager.free(req.pages)
             req.pages = None
 
     def _tick(self):
-        self._retain.append((self.cache, self._tokens, self._active_dev,
-                             self._table_dev))
+        kv = self.kv
         if self.paged:
-            self._tokens, self.cache = self.decode(
-                self._params, self.cache, self._tokens, self._active_dev,
-                self._table_dev)
+            new_tokens, new_cache = self.decode(
+                self._params, kv.cache, self._tokens, self._active_dev,
+                kv.table_dev)
         else:
-            self._tokens, self.cache = self.decode(
-                self._params, self.cache, self._tokens, self._active_dev)
+            new_tokens, new_cache = self.decode(
+                self._params, kv.cache, self._tokens, self._active_dev)
+        kv.commit(new_cache, donated=self.donate)
+        self._rebind_tokens(new_tokens)
         if self.sync_ticks:
             jax.block_until_ready(self._tokens)
         now = time.monotonic()
@@ -698,13 +811,13 @@ class ServeEngine:
                 self._release_slot(s)         # slot + pages freed now
                 freed = True
         if freed:
-            self._active_dev = jnp.array(self._active)
+            self._rebind_active()
             if self.paged:
-                self._table_dev = jnp.array(self._table)
+                self.kv.sync_table()
         # freed: a finish forced the chain; sync_ticks / host_toks: this
         # tick's sync did.  Otherwise flush only past the depth cap.
-        self._retain_flush(synced=freed or self.sync_ticks
-                           or host_toks is not None)
+        self.kv.flush(synced=freed or self.sync_ticks
+                      or host_toks is not None)
 
     def _drained(self) -> bool:
         with self._lock:
@@ -754,7 +867,9 @@ class ServeEngine:
             "prefill_calls": self.stats_prefill_calls,
             "prefill_reqs": self.stats_prefill_reqs,
             "prefill_chunks": self.stats_prefill_chunks,
+            "prefill_chunk_tasks": self.stats_prefill_chunk_tasks,
             "stopped_early": self.stats_stopped_early,
+            "donate": self.donate,
             "p50_latency_s": percentile(lats, 0.50),
             "p99_latency_s": percentile(lats, 0.99),
             "p50_ttft_s": percentile(ttfts, 0.50),
@@ -763,6 +878,5 @@ class ServeEngine:
             "p99_tick_s": percentile(ticks, 0.99),
             "page_size": self.page_size,
         }
-        if self.paged:
-            out.update(self.pager.stats())
+        out.update(self.kv.stats())     # versions, commits, pager pool
         return out

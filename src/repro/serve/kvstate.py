@@ -1,0 +1,214 @@
+"""Single-owner KV state for the serve engine: the cache pytree, its
+paged block tables, and the versioned-pinning discipline that makes
+buffer donation sound.
+
+Ownership model
+---------------
+Exactly one live version of the KV cache pytree exists at any time and
+:class:`KVState` is its owner.  Every jitted step that rewrites the
+cache (decode tick, slot insert) consumes the current version and
+produces the next, and the rebind goes through :meth:`KVState.commit` —
+nothing else ever holds the live tree.  That single-owner rule is what
+makes **buffer donation** a correctness-preserving optimisation: with
+``donate_argnums`` on the cache argument, XLA aliases the donated
+input's device buffers into the output (verified per leaf on this
+backend), so a decode tick updates the KV pool *in place* instead of
+materialising a full copy — but the donated version is consumed (its
+buffers are dead to Python), so a second holder of the old version
+would be a use-after-free, not just a stale read.
+
+Versioned pinning (the ``_retain`` workaround, made principled)
+---------------------------------------------------------------
+On this backend (jax 0.4.37 CPU) a device buffer whose last Python
+reference drops can be recycled while a dispatched-but-pending
+computation still reads it — observed as token corruption under serve
+load; minimal standalone repro in ``examples/repro_buffer_lifetime.py``.
+Non-donated arguments of pending steps (token rows, active masks, block
+tables, prefill rows) therefore must stay referenced until a device
+sync proves the dispatch chain has drained.  ``KVState`` owns that
+discipline explicitly, replacing the engine's ad-hoc ``_retain`` list:
+
+* :meth:`pin` — pin a *displaced* version (or a dispatch temporary) the
+  moment it stops being engine state;
+* :meth:`commit` — rebind the live cache to the next version, pinning
+  the displaced one exactly when it was **not** donated.  A donated
+  version's lifetime is owned by the computation that consumed it, so
+  pinning it would hold a dead husk — the two mechanisms must never
+  overlap (asserted when ``debug_validate`` is on, and tested);
+* :meth:`flush` — drop every pin at a proven sync point, or pay one
+  bounded ``block_until_ready`` when the pin list hits its cap (an
+  unbounded list pins whole cache versions: a leak with allocator
+  stalls).
+
+Paper mapping: a dispatch is a *block* (device work in flight, versions
+pinned) and the sync that lets :meth:`flush` clear them is the matching
+*unblock* — the same requirement the paper puts on monitored kernel
+events (every block must pair with the unblock that releases it), here
+applied to runtime-owned buffer lifetimes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..models.layers import check_cache_invariant
+from ..steps import init_paged_slot_cache, init_slot_cache
+from .pager import GARBAGE_PAGE, PagePool
+
+# The engine-init guard and the per-block trace-time guard are the SAME
+# contract (identical treedef + per-leaf shape/dtype, the XLA
+# input/output aliasing precondition) — one implementation, two call
+# sites, so the rule can never drift between layers.  Works on concrete
+# arrays and on ``jax.eval_shape`` results alike.
+alias_safe = check_cache_invariant
+
+
+def _no_deleted_leaves(objs, where: str):
+    for leaf in jax.tree.leaves(objs):
+        deleted = getattr(leaf, "is_deleted", None)
+        assert deleted is None or not deleted(), (
+            f"{where}: a donated (deleted) buffer is pinned — donation "
+            "and pinning must never overlap")
+
+
+class KVState:
+    """Single owner of one slot pool's KV cache (dense or paged).
+
+    Parameters mirror the engine's cache geometry.  With ``page_size``
+    set the linear attention leaves are paged pools; ``KVState`` then
+    also owns the block table (host copy + device mirror, garbage page
+    re-pointing) and the :class:`PagePool` free-list (``num_pages``
+    defaults to dense-equivalent capacity + the garbage page).
+    """
+
+    def __init__(self, cfg, slots: int, cache_len: int, dtype, *,
+                 page_size: int | None = None, num_pages: int | None = None,
+                 pin_max: int = 64):
+        self.cfg = cfg
+        self.slots = slots
+        self.cache_len = cache_len
+        self.page_size = page_size
+        self.paged = page_size is not None
+        if self.paged:
+            assert cache_len % page_size == 0, (
+                f"page_size {page_size} must divide cache_len {cache_len}")
+            self.pages_per_slot = cache_len // page_size
+            if num_pages is None:
+                num_pages = slots * self.pages_per_slot + 1
+            self.pager = PagePool(num_pages, page_size)
+            self.cache = init_paged_slot_cache(cfg, slots, cache_len, dtype,
+                                               page_size, num_pages)
+            self._table = np.zeros((slots, self.pages_per_slot), np.int32)
+            # device mirrors are always jnp.array (a copy): asarray may
+            # alias the numpy buffer, which async dispatch could read
+            # *after* a later host-side mutation
+            self.table_dev = jnp.array(self._table)
+        else:
+            self.pages_per_slot = 0
+            self.pager = None
+            self.cache = init_slot_cache(cfg, slots, cache_len, dtype)
+            self._table = self.table_dev = None
+        self._pins: list = []
+        self._pin_max = pin_max
+        self.version = 0
+        self.donated_commits = 0
+        self.copied_commits = 0
+        self.pin_syncs = 0            # forced drains from a full pin list
+        self.debug_validate = False   # tests: scan pins for dead buffers
+
+    # ------------------------------------------------------------ ownership
+    def commit(self, new_cache, *, donated: bool) -> None:
+        """Rebind the live cache to ``new_cache``.
+
+        ``donated=False``: the displaced version may still be read by
+        dispatched-but-pending computations — pin it until a sync point.
+        ``donated=True``: the displaced version was consumed by the jit
+        call that produced ``new_cache`` (its buffers now belong to that
+        execution), so it must **not** be pinned."""
+        if not donated:
+            self._pins.append(self.cache)
+            self.copied_commits += 1
+        else:
+            self.donated_commits += 1
+        self.cache = new_cache
+        self.version += 1
+        if self.debug_validate:
+            self.assert_no_deleted_pins()
+
+    def pin(self, *objs) -> None:
+        """Pin device values a pending computation may still read: a
+        displaced version of engine hot state (old token rows, old
+        masks, old tables) or a dispatch temporary (prefill rows,
+        scalar indices) whose Python references drop before the
+        dispatch is known to have executed."""
+        self._pins.append(objs)
+
+    def flush(self, synced: bool) -> None:
+        """Drop the pinned versions.  ``synced=True`` when the caller
+        just forced the dispatch chain (every pinned buffer's reader has
+        executed); otherwise flush only past the depth cap, paying one
+        explicit drain first."""
+        if synced:
+            self._pins.clear()
+        elif len(self._pins) > self._pin_max:
+            jax.block_until_ready(self.cache["pos"])
+            self.pin_syncs += 1
+            self._pins.clear()
+
+    @property
+    def pins(self) -> int:
+        return len(self._pins)
+
+    def assert_no_deleted_pins(self) -> None:
+        """The donation/pinning exclusivity invariant, checkable: no
+        pinned leaf may be a donated (deleted) buffer."""
+        _no_deleted_leaves(self._pins, "KVState pins")
+
+    # ------------------------------------------------------------ block table
+    def bind_slot_pages(self, slot: int, ids) -> jnp.ndarray:
+        """Point ``slot``'s block table at physical pages ``ids``
+        (unreserved logical pages at the garbage page), refresh the
+        device mirror (pinning the displaced one), and return the
+        slot's table row as a device array for the insert step."""
+        assert self.paged
+        self._table[slot, :] = GARBAGE_PAGE
+        self._table[slot, :len(ids)] = ids
+        self.sync_table()
+        return jnp.array(self._table[slot])
+
+    def release_slot_pages(self, slot: int) -> None:
+        """Re-point a finished slot's table rows at the garbage page so
+        the dead slot's frozen-pos cache writes land nowhere.  Host-side
+        only — the caller refreshes the device mirror once per batch of
+        releases (:meth:`sync_table`)."""
+        assert self.paged
+        self._table[slot, :] = GARBAGE_PAGE
+
+    def sync_table(self) -> None:
+        """Refresh the device block table from the host copy; the
+        displaced mirror is an argument of pending decode dispatches,
+        so it is pinned, not dropped."""
+        assert self.paged
+        self.pin(self.table_dev)
+        self.table_dev = jnp.array(self._table)
+
+    # ------------------------------------------------------------ reporting
+    def stats(self) -> dict:
+        out = {
+            "kv_version": self.version,
+            "kv_donated_commits": self.donated_commits,
+            "kv_copied_commits": self.copied_commits,
+            "kv_pins": len(self._pins),
+            "kv_pin_syncs": self.pin_syncs,
+        }
+        if self.pager is not None:
+            out.update(self.pager.stats())
+        return out
+
+    def __repr__(self):
+        layout = (f"paged(ps={self.page_size})" if self.paged else "dense")
+        return (f"<KVState v{self.version} {layout} slots={self.slots} "
+                f"pins={len(self._pins)} donated={self.donated_commits} "
+                f"copied={self.copied_commits}>")

@@ -68,6 +68,12 @@ class PagePool:
         """Pages needed to hold ``n_tokens`` token slots."""
         return max(0, -(-n_tokens // self.page_size))
 
+    def reserve(self, n_tokens: int) -> list[int] | None:
+        """Worst-case admission reservation: every page ``n_tokens``
+        token slots could ever touch, all-or-nothing (the deadlock-free
+        admission rule in one call — the engine's only alloc path)."""
+        return self.alloc(self.pages_for(n_tokens))
+
     def alloc(self, n_pages: int) -> list[int] | None:
         """Take ``n_pages`` pages off the free list, or ``None`` (and no
         partial grant) when fewer are free — the caller blocks admission

@@ -228,7 +228,12 @@ def make_batched_insert_step(cfg, mesh=None, *, cache_len: int,
 
     ``rows_cache`` is a dense (B, cache_len) prefill/chunk cache; ``row``
     and ``slot`` may be traced scalars, so one jit covers every
-    (row, slot) pair per batch shape."""
+    (row, slot) pair per batch shape.
+
+    Donation: safe to jit with ``donate_argnums=(0,)`` (the pool cache;
+    every leaf is a shape/dtype-preserving in-place write).  The
+    ``rows_cache`` argument must **not** be donated — one prefill batch
+    feeds one insert per row, so the same version is read repeatedly."""
 
     def insert_step(cache, rows_cache, row, slot, table_row=None):
         with sharding_ctx(mesh, DECODE_RULES):
@@ -275,7 +280,13 @@ def make_decode_step(cfg, mesh=None, *, cache_len: int | None = None,
     With ``page_size`` set the linear attention leaves of ``cache`` are
     paged pools and the extra ``table`` argument carries the
     (slots, pages_per_slot) block table; dead slots' tables point at
-    garbage page 0, so their (frozen-``pos``) cache writes land there."""
+    garbage page 0, so their (frozen-``pos``) cache writes land there.
+
+    Donation: safe to jit with ``donate_argnums=(1,)`` — the forward
+    pass preserves every cache leaf's shape/dtype (trace-time checked),
+    so XLA aliases the whole pool in place and a tick stops copying it.
+    Tokens/active/table are *not* donated: the engine keeps reading
+    them (token streams, host mirrors) after the dispatch."""
     paged = page_size is not None
     if paged:
         assert cache_len is not None and cache_len % page_size == 0
@@ -313,7 +324,12 @@ def make_prefill_chunk_step(cfg, mesh=None, cache_len: int | None = None):
     [q_off, q_off + C).  ``q_off`` may be traced — one jit per chunk
     *shape*, not per offset.  The final chunk's logits equal the one-shot
     prefill's bit-for-bit (masked key lanes are exact zeros); MoE/SSM/SWA
-    ring patterns cannot chunk exactly — see :func:`chunkable`."""
+    ring patterns cannot chunk exactly — see :func:`chunkable`.
+
+    Donation: safe to jit with ``donate_argnums=(1,)`` — each chunk
+    consumes the previous chunk's ``row_cache`` version exactly once (a
+    linear chain), and the cache-append writes preserve every leaf's
+    shape/dtype."""
     assert cache_len is not None
     assert chunkable(cfg, cache_len), (
         f"{cfg.name}: chunked prefill needs linear-cache attention blocks "

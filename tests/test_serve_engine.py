@@ -315,6 +315,94 @@ def test_oversized_request_fails_loudly(built):
 
 
 @pytest.mark.slow
+def test_engine_donation_off_leg_still_exact(built):
+    """donate=False is the copying legacy path (benchmark A/B leg): same
+    tokens, every commit pins the displaced cache version, nothing is
+    donated."""
+    from repro.serve import make_jit_steps
+
+    b = built
+    steps = make_jit_steps(b["cfg"], cache_len=CACHE_LEN,
+                           page_size=PAGE_SIZE, donate=False)
+    reqs = [Request(i, b["prompts"][i], max_new_tokens=4)
+            for i in range(5)]
+    stats, pager = _run_engine(b, reqs, jit_steps=steps)
+    for r in reqs:
+        assert np.array_equal(np.asarray(r.wait(), np.int32),
+                              b["ref"][r.rid, :4])
+    assert stats["donate"] is False
+    assert stats["kv_donated_commits"] == 0
+    assert stats["kv_copied_commits"] == stats["kv_version"] > 0
+
+
+@pytest.mark.slow
+def test_donated_version_never_pinned(built):
+    """The donation/pinning exclusivity invariant, live: with
+    debug_validate on, every commit scans the pin list for donated
+    (deleted) buffers — a single overlap would throw inside the decode
+    driver and fail the requests."""
+    from repro.serve import ServeEngine
+
+    b = built
+    reqs = [Request(i, b["prompts"][i], max_new_tokens=GEN_MAX)
+            for i in range(6)]
+    eng = ServeEngine(b["cfg"], b["params"], slots=3, cache_len=CACHE_LEN,
+                      umt=True, n_cores=4, jit_steps=b["steps"],
+                      page_size=PAGE_SIZE)
+    eng.kv.debug_validate = True
+    with eng:
+        for r in reqs:
+            eng.submit(r)
+        eng.close()
+        eng.join()
+        stats = eng.stats()
+        eng.kv.assert_no_deleted_pins()
+    for r in reqs:
+        assert np.array_equal(np.asarray(r.wait(), np.int32),
+                              b["ref"][r.rid])
+    assert stats["donate"] is True
+    assert stats["kv_donated_commits"] == stats["kv_version"] > 0
+    assert stats["kv_copied_commits"] == 0
+
+
+@pytest.mark.slow
+def test_chunked_prefill_runs_as_continuation_tasks(built):
+    """Chunked prefill across rounds: every chunk is its own UMT task
+    (re-enqueued continuation, not a loop inside one task), so two long
+    rounds' chunks can interleave on a saturated pool.  Checked
+    structurally on a traced runtime: one ``serve.prefill.chunk`` task
+    start per chunk, and the chunk count matches the chunk arithmetic —
+    with tokens still bit-exact."""
+    from repro.core import UMTRuntime
+    from repro.serve import ServeEngine
+
+    b = built
+    chunk = 3
+    reqs = [Request(i, b["prompts"][i], max_new_tokens=3)
+            for i in range(N_REQ)]
+    with UMTRuntime(n_cores=4, umt=True, trace=True) as rt:
+        with ServeEngine(b["cfg"], b["params"], slots=3,
+                         cache_len=CACHE_LEN, rt=rt, jit_steps=b["steps"],
+                         page_size=PAGE_SIZE, prefill_chunk=chunk) as eng:
+            for r in reqs:
+                eng.submit(r)
+            eng.close()
+            eng.join()
+            stats = eng.stats()
+        chunk_starts = [e for e in rt.tracer.events
+                        if e[1] == "task_start"
+                        and "serve.prefill.chunk" in str(e[4])]
+    for r in reqs:
+        assert np.array_equal(np.asarray(r.wait(), np.int32),
+                              b["ref"][r.rid, :3])
+    per_group = -(-PLEN // chunk)                   # ceil(8/3) = 3
+    assert stats["prefill_chunks"] == per_group * stats["prefill_calls"]
+    # the structural point: one task start per chunk
+    assert len(chunk_starts) == stats["prefill_chunk_tasks"] \
+        == stats["prefill_chunks"] > 0
+
+
+@pytest.mark.slow
 def test_engine_response_sink_and_weights_load_task(built):
     """Callable params (checkpointed-weights load) runs as a UMT task
     before the first prefill; the response sink sees every request."""

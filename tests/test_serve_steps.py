@@ -50,6 +50,7 @@ def _build(arch, built):
             patches = jax.random.normal(
                 jax.random.PRNGKey(2), (SLOTS, cfg.n_patches, cfg.d_model),
                 jnp.float32) * 0.02
+        can_chunk = chunkable(cfg, cache_len)
         built[arch] = dict(
             cfg=cfg, params=params, cache_len=cache_len, prompts=prompts,
             patches=patches,
@@ -57,6 +58,8 @@ def _build(arch, built):
             serve=jax.jit(make_serve_step(cfg)),
             insert=jax.jit(make_insert_step(cfg)),
             decode=jax.jit(make_decode_step(cfg)),
+            insert_dense=jax.jit(make_batched_insert_step(
+                cfg, cache_len=cache_len, page_size=None)),
             insert_paged=jax.jit(make_batched_insert_step(
                 cfg, cache_len=cache_len, page_size=PAGE_SIZE)),
             decode_paged=jax.jit(make_decode_step(
@@ -64,7 +67,25 @@ def _build(arch, built):
             chunk=(jax.jit(make_prefill_chunk_step(cfg,
                                                    cache_len=cache_len),
                            static_argnames=("attn_extent", "want_logits"))
-                   if chunkable(cfg, cache_len) else None),
+                   if can_chunk else None),
+            # donated legs: the steps consume the cache version they
+            # rewrite (donate_argnums on the cache arg), exactly like
+            # the engine's default fast path
+            insert_dense_don=jax.jit(make_batched_insert_step(
+                cfg, cache_len=cache_len, page_size=None),
+                donate_argnums=(0,)),
+            insert_paged_don=jax.jit(make_batched_insert_step(
+                cfg, cache_len=cache_len, page_size=PAGE_SIZE),
+                donate_argnums=(0,)),
+            decode_don=jax.jit(make_decode_step(cfg),
+                               donate_argnums=(1,)),
+            decode_paged_don=jax.jit(make_decode_step(
+                cfg, cache_len=cache_len, page_size=PAGE_SIZE),
+                donate_argnums=(1,)),
+            chunk_don=(jax.jit(make_prefill_chunk_step(
+                cfg, cache_len=cache_len), donate_argnums=(1,),
+                static_argnames=("attn_extent", "want_logits"))
+                if can_chunk else None),
         )
     return built[arch]
 
@@ -99,15 +120,20 @@ def test_scrambled_insert_matches_oneshot(arch, built):
         rc, t0 = _row_prefill(b, r)
         pool = b["insert"](pool, rc, jnp.int32(r))
         toks = toks.at[r].set(t0[0])
-        outs[r] = [t0]
+        outs[r] = [np.asarray(t0)]
     active = jnp.ones((SLOTS,), bool)
     for _ in range(GEN - 1):
         toks, pool = b["decode"](b["params"], pool, toks, active)
+        # force per tick, never accumulate lazy slices of rebound
+        # arrays: this backend can recycle a buffer whose last Python
+        # reference drops while a pending computation still reads it
+        # (see examples/repro_buffer_lifetime.py) — the harness obeys
+        # the same pinning/forcing discipline as the engine
+        host = np.asarray(toks)
         for r in outs:
-            outs[r].append(toks[r:r + 1])
+            outs[r].append(host[r:r + 1])
     got = np.concatenate(
-        [np.asarray(jnp.concatenate(outs[r], axis=1))
-         for r in range(SLOTS)], axis=0)
+        [np.concatenate(outs[r], axis=1) for r in range(SLOTS)], axis=0)
     assert np.array_equal(ref, got)
 
 
@@ -127,26 +153,33 @@ def test_evict_and_reuse_slot_mid_decode(arch, built):
     toks = jnp.zeros((SLOTS, 1) + extra, jnp.int32)
     active = np.zeros((SLOTS,), bool)
 
+    # forcing discipline (matches the engine's): every decode tick is
+    # forced to host before `active` mutates or `toks` is rebound
+    # again — lazy slices of rebound arrays (and dropped jnp.array mask
+    # temporaries) can read recycled buffers on this backend, see
+    # examples/repro_buffer_lifetime.py
+
     # A = request 0 into slot 1; decodes 2 ticks alone
     rc, t0 = _row_prefill(b, 0)
     pool = b["insert"](pool, rc, jnp.int32(1))
     toks = toks.at[1].set(t0[0])
     active[1] = True
-    out_a = [t0]
+    out_a = [np.asarray(t0)]
     for _ in range(2):
         toks, pool = b["decode"](b["params"], pool, toks,
                                  jnp.array(active))
-        out_a.append(toks[1:2])
+        out_a.append(np.asarray(toks)[1:2])
 
     # B = request 2 arrives into dead slot 0 while A keeps decoding
     rc, t0 = _row_prefill(b, 2)
     pool = b["insert"](pool, rc, jnp.int32(0))
     toks = toks.at[0].set(t0[0])
     active[0] = True
-    out_b = [t0]
+    out_b = [np.asarray(t0)]
     toks, pool = b["decode"](b["params"], pool, toks, jnp.array(active))
-    out_a.append(toks[1:2])
-    out_b.append(toks[0:1])
+    host = np.asarray(toks)
+    out_a.append(host[1:2])
+    out_b.append(host[0:1])
 
     # A done (GEN tokens collected): evict, reuse its slot for request 1
     active[1] = False
@@ -154,19 +187,20 @@ def test_evict_and_reuse_slot_mid_decode(arch, built):
     pool = b["insert"](pool, rc, jnp.int32(1))
     toks = toks.at[1].set(t0[0])
     active[1] = True
-    out_c = [t0]
+    out_c = [np.asarray(t0)]
     for _ in range(GEN - 1):
         toks, pool = b["decode"](b["params"], pool, toks,
                                  jnp.array(active))
+        host = np.asarray(toks)
         if len(out_b) < GEN:
-            out_b.append(toks[0:1])
+            out_b.append(host[0:1])
             if len(out_b) == GEN:
                 active[0] = False     # B done: evicted mid-stream
-        out_c.append(toks[1:2])
+        out_c.append(host[1:2])
 
-    got_a = np.asarray(jnp.concatenate(out_a, axis=1))[0]
-    got_b = np.asarray(jnp.concatenate(out_b, axis=1))[0]
-    got_c = np.asarray(jnp.concatenate(out_c, axis=1))[0]
+    got_a = np.concatenate(out_a, axis=1)[0]
+    got_b = np.concatenate(out_b, axis=1)[0]
+    got_c = np.concatenate(out_c, axis=1)[0]
     assert np.array_equal(got_a, ref[0])
     assert np.array_equal(got_b, ref[2])
     assert np.array_equal(got_c, ref[1])
@@ -189,59 +223,82 @@ def test_masked_decode_freezes_dead_slot_pos():
     assert int(toks[0, 0]) == 0 and int(toks[1, 0]) == 0
 
 
-# ------------------------------------------------------- paged schedule fuzz
-def _chunked_prefill_rows(b, chunk):
+# ------------------------------------------------- dense/paged schedule fuzz
+def _chunked_prefill_rows(b, chunk, chunk_fn=None):
     """Cache-append chunked prefill of the whole prompt batch (ragged last
     chunk; vision patches ride the first chunk; extent buckets + LM head
-    skipped on non-final chunks, exactly like the engine's path)."""
+    skipped on non-final chunks, exactly like the engine's path).
+    ``chunk_fn`` selects the jit (e.g. the donated variant, which
+    consumes each version of the row cache exactly once — the chain
+    below is single-owner by construction)."""
     cfg = b["cfg"]
+    chunk_fn = chunk_fn or b["chunk"]
     rows = init_cache(cfg, SLOTS, b["cache_len"], jnp.dtype(cfg.dtype))
     npatch = cfg.n_patches if cfg.frontend == "vision_patches" else 0
     off = c0 = 0
     first = True
     logits = None
+    pins = []      # slice/offset temporaries + displaced row versions
     while c0 < PLEN:
         c1 = min(c0 + chunk, PLEN)
         covered = off + (c1 - c0) + (npatch if first else 0)
         ext = min(b["cache_len"], -(-covered // chunk) * chunk)
-        rows, logits = b["chunk"](b["params"], rows,
-                                  b["prompts"][:, c0:c1], jnp.int32(off),
-                                  b["patches"] if first else None,
-                                  attn_extent=ext, want_logits=c1 >= PLEN)
+        ct, od = b["prompts"][:, c0:c1], jnp.int32(off)
+        pins.append((ct, od, rows))
+        rows, logits = chunk_fn(b["params"], rows, ct, od,
+                                b["patches"] if first else None,
+                                attn_extent=ext, want_logits=c1 >= PLEN)
         off = covered
         first = False
         c0 = c1
+    # drain the chunk chain before handing the rows out: every pinned
+    # temporary and displaced (or donated) version has then executed,
+    # so nothing pending can read a recycled buffer (the engine pins
+    # and syncs per chunk the same way)
+    jax.block_until_ready(rows["pos"])
+    pins.clear()
     return rows, jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
-def _run_paged_schedule(b, seed, page_size, insert, decode, n_req=6,
-                        chunk=None):
+def _run_schedule(b, seed, page_size, insert, decode, n_req=6,
+                  chunk=None, chunk_fn=None, check_alias=False):
     """Seeded schedule generator: requests (prompt rows reused mod SLOTS,
-    fuzzed budgets) arrive in a random order into random free slots, pages
-    are allocated from a deliberately tight PagePool (admission blocks on
-    exhaustion) and freed the tick a request completes, decode ticks
-    interleave randomly with inserts.  Every request's greedy stream must
-    equal its one-shot row prefix, bit for bit."""
+    fuzzed budgets) arrive in a random order into random free slots and
+    decode ticks interleave randomly with inserts.  Paged
+    (``page_size`` set): pages come from a deliberately tight PagePool
+    (admission blocks on exhaustion) and are freed the tick a request
+    completes.  Dense (``page_size=None``): same schedule on the per-slot
+    layout.  Works with donated or copying jits — the cache is rebound
+    on every step, so the single-owner discipline holds either way.
+    Every request's greedy stream must equal its one-shot row prefix,
+    bit for bit; ``check_alias`` additionally asserts the donated decode
+    really reused the big cache leaf's buffer (the eliminated copy)."""
     cfg = b["cfg"]
+    paged = page_size is not None
     ref = _oneshot_reference(b)
     rng = np.random.default_rng(seed)
     cache_len = b["cache_len"]
-    pps = cache_len // page_size
-    # tight pool: enough for ~2 of 3 slots -> admission must block
-    pool_pages = 2 * pps + 2
-    pager = PagePool(pool_pages, page_size)
     npatch = cfg.n_patches if cfg.frontend == "vision_patches" else 0
 
     if chunk is not None:
-        rows_cache, t0 = _chunked_prefill_rows(b, chunk)
+        rows_cache, t0 = _chunked_prefill_rows(b, chunk, chunk_fn)
     else:
         rc, logits = b["prefill"](b["params"], b["prompts"], b["patches"])
         rows_cache, t0 = rc, jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
-    cache = init_paged_slot_cache(cfg, SLOTS, cache_len,
-                                  jnp.dtype(cfg.dtype), page_size,
-                                  pool_pages)
-    table = np.zeros((SLOTS, pps), np.int32)
+    if paged:
+        pps = cache_len // page_size
+        # tight pool: enough for ~2 of 3 slots -> admission must block
+        pool_pages = 2 * pps + 2
+        pager = PagePool(pool_pages, page_size)
+        cache = init_paged_slot_cache(cfg, SLOTS, cache_len,
+                                      jnp.dtype(cfg.dtype), page_size,
+                                      pool_pages)
+        table = np.zeros((SLOTS, pps), np.int32)
+    else:
+        pager = table = None
+        cache = init_slot_cache(cfg, SLOTS, cache_len,
+                                jnp.dtype(cfg.dtype))
     extra = ((cfg.n_codebooks,) if cfg.frontend == "audio_codebooks"
              else ())
     toks = jnp.zeros((SLOTS, 1) + extra, jnp.int32)
@@ -254,12 +311,19 @@ def _run_paged_schedule(b, seed, page_size, insert, decode, n_req=6,
     outs = {}
     pages_of = {}
     blocked_allocs = 0
+    alias_checked = not check_alias
+    # versioned pinning, harness edition: displaced cache/token versions
+    # and mask/table temporaries stay referenced while dispatches may be
+    # pending (same discipline as KVState; donated husks are harmless to
+    # hold).  Dropped only after the final sync below.
+    pins = []
 
     def free_slot_of(r, s):
         active[s] = False
         del live[s]
-        table[s, :] = 0
-        pager.free(pages_of.pop(r))
+        if paged:
+            table[s, :] = 0
+            pager.free(pages_of.pop(r))
 
     for _ in range(10_000):
         if not waiting and not live:
@@ -271,18 +335,26 @@ def _run_paged_schedule(b, seed, page_size, insert, decode, n_req=6,
         if want_insert:
             i = int(waiting[0])
             row = i % SLOTS
-            need = pager.pages_for(PLEN + npatch + int(gens[i]) - 1)
-            ids = pager.alloc(need)
-            if ids is None:
+            ids = None
+            if paged:
+                ids = pager.reserve(PLEN + npatch + int(gens[i]) - 1)
+            if paged and ids is None:
                 blocked_allocs += 1     # admission blocks; tick instead
             else:
                 waiting.pop(0)
                 s = int(rng.choice(free))
-                pages_of[i] = ids
-                table[s, :] = 0
-                table[s, :len(ids)] = ids
-                cache = insert(cache, rows_cache, jnp.int32(row),
-                               jnp.int32(s), jnp.array(table[s]))
+                pins.append((cache, toks))
+                if paged:
+                    pages_of[i] = ids
+                    table[s, :] = 0
+                    table[s, :len(ids)] = ids
+                    trow = jnp.array(table[s])
+                    pins.append(trow)
+                    cache = insert(cache, rows_cache, jnp.int32(row),
+                                   jnp.int32(s), trow)
+                else:
+                    cache = insert(cache, rows_cache, jnp.int32(row),
+                                   jnp.int32(s))
                 toks = toks.at[s].set(t0[row])
                 outs[i] = [np.asarray(t0[row])]
                 active[s] = True
@@ -291,14 +363,32 @@ def _run_paged_schedule(b, seed, page_size, insert, decode, n_req=6,
                 if len(outs[i]) >= gens[i]:
                     free_slot_of(i, s)
         if live and not did_insert:
-            toks, cache = decode(b["params"], cache, toks,
-                                 jnp.array(active), jnp.array(table))
+            if not alias_checked:
+                leaves = jax.tree.leaves(cache)
+                big = max(leaves, key=lambda x: x.nbytes)
+                big_ptr = big.unsafe_buffer_pointer()
+            pins.append((cache, toks))
+            args = (b["params"], cache, toks, jnp.array(active))
+            if paged:
+                args = args + (jnp.array(table),)
+            pins.append(args[3:])
+            toks, cache = decode(*args)
+            if not alias_checked:
+                new_ptrs = {x.unsafe_buffer_pointer()
+                            for x in jax.tree.leaves(cache)}
+                assert big_ptr in new_ptrs, (
+                    "donated decode did not alias the big cache leaf — "
+                    "the per-tick pool copy is back")
+                alias_checked = True
             for s, i in list(live.items()):
                 outs[i].append(np.asarray(toks[s]))
                 if len(outs[i]) >= gens[i]:
                     free_slot_of(i, s)
     assert not waiting and not live, "schedule deadlocked"
-    assert pager.used_pages == 0, "pages leaked"
+    jax.block_until_ready(toks)
+    pins.clear()                    # chain drained: nothing pending
+    if paged:
+        assert pager.used_pages == 0, "pages leaked"
     for i in range(n_req):
         got = np.concatenate(outs[i], axis=0)
         want = ref[i % SLOTS, :gens[i]]
@@ -317,8 +407,38 @@ def test_paged_schedule_fuzz_matches_oneshot(arch, seed, built):
     chunk = None
     if b["chunk"] is not None:
         chunk = int(np.random.default_rng(100 + seed).choice([3, 5]))
-    _run_paged_schedule(b, seed, PAGE_SIZE, b["insert_paged"],
-                        b["decode_paged"], chunk=chunk)
+    _run_schedule(b, seed, PAGE_SIZE, b["insert_paged"],
+                  b["decode_paged"], chunk=chunk)
+
+
+@pytest.mark.parametrize("arch", FUZZ_ARCHS)
+@pytest.mark.parametrize("layout,donate", [("dense", False),
+                                           ("dense", True),
+                                           ("paged", True)])
+def test_schedule_fuzz_donation_grid_matches_oneshot(arch, layout, donate,
+                                                     built):
+    """Donation on x off, dense x paged (the paged x off cell is the
+    fuzz above), across plain/SWA+MoE/MLA/vision/audio frontends and the
+    SSM hybrid: donated steps consume the cache version they rewrite —
+    fuzzed schedules stay bit-identical to the one-shot rows, and (spot
+    check) the donated decode really reuses the big cache leaf's
+    buffer in place."""
+    b = _build(arch, built)
+    suffix = "_don" if donate else ""
+    if layout == "paged":
+        insert, decode = b["insert_paged" + suffix], \
+            b["decode_paged" + suffix]
+        ps = PAGE_SIZE
+    else:
+        insert, decode = b["insert_dense" + suffix], \
+            b["decode" + suffix]
+        ps = None
+    chunk = chunk_fn = None
+    if b["chunk"] is not None:
+        chunk, chunk_fn = 3, (b["chunk_don"] if donate else b["chunk"])
+    _run_schedule(b, 7, ps, insert, decode, chunk=chunk,
+                  chunk_fn=chunk_fn,
+                  check_alias=donate and arch == "qwen2.5-14b")
 
 
 def test_paged_admission_blocks_under_tight_pool(built):
@@ -326,21 +446,24 @@ def test_paged_admission_blocks_under_tight_pool(built):
     least one alloc must have been refused (and, per the fuzz asserts,
     refusal never corrupted a stream or leaked a page)."""
     b = _build("qwen2.5-14b", built)
-    blocked = sum(_run_paged_schedule(b, s, PAGE_SIZE, b["insert_paged"],
-                                      b["decode_paged"])
+    blocked = sum(_run_schedule(b, s, PAGE_SIZE, b["insert_paged"],
+                                b["decode_paged"])
                   for s in range(4))
     assert blocked > 0
 
 
-def test_paged_page_size_one_degenerate(built):
+@pytest.mark.parametrize("donate", [False, True])
+def test_paged_page_size_one_degenerate(donate, built):
     """page_size=1: one token per page, block table as long as the cache;
-    still bit-identical."""
+    still bit-identical — donated and copying alike."""
     b = _build("qwen2.5-14b", built)
     insert = jax.jit(make_batched_insert_step(
-        b["cfg"], cache_len=b["cache_len"], page_size=1))
+        b["cfg"], cache_len=b["cache_len"], page_size=1),
+        donate_argnums=(0,) if donate else ())
     decode = jax.jit(make_decode_step(
-        b["cfg"], cache_len=b["cache_len"], page_size=1))
-    _run_paged_schedule(b, 0, 1, insert, decode)
+        b["cfg"], cache_len=b["cache_len"], page_size=1),
+        donate_argnums=(1,) if donate else ())
+    _run_schedule(b, 0, 1, insert, decode, check_alias=donate)
 
 
 @pytest.mark.parametrize("arch",

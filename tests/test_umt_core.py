@@ -169,6 +169,51 @@ def test_sharded_queue_steal_takes_oldest():
     t, victim = q.steal(0)
     assert t is first and victim == 1        # head steal: victim FIFO intact
     assert q.pop_local(1) is second
+    assert q.steal_batches.value == 0        # 2 < steal_half_min: single
+
+
+def test_sharded_queue_steal_half_when_imbalanced():
+    """A dry thief facing a victim holding >= steal_half_min tasks takes
+    half the victim's deque in one steal: oldest returned, the next
+    half-minus-one re-homed onto the thief's shard, FIFO order preserved
+    on both sides, batch counters ticked."""
+    q = ShardedReadyQueue(3)
+    ts = [_mk() for _ in range(8)]
+    for t in ts:
+        q.push(t, 1)
+    t, victim = q.steal(0)
+    assert t is ts[0] and victim == 1        # nearest neighbour, oldest
+    assert q.steal_batches.value == 1
+    assert q.steal_batch_tasks.value == 3    # half of 8, minus the claim
+    # thief's local shard now serves the moved tasks in their old order
+    assert [q.pop_local(0) for _ in range(3)] == ts[1:4]
+    assert q.pop_local(0) is None
+    # victim keeps the newest half, FIFO intact
+    assert [q.pop_local(1) for _ in range(4)] == ts[4:8]
+    assert q.pop_local(1) is None
+    assert len(q) == 0
+
+
+def test_sharded_queue_steal_below_threshold_takes_one():
+    q = ShardedReadyQueue(2, steal_half_min=4)
+    ts = [_mk() for _ in range(3)]
+    for t in ts:
+        q.push(t, 1)
+    t, _ = q.steal(0)
+    assert t is ts[0]
+    assert q.steal_batches.value == 0 and q.steal_batch_tasks.value == 0
+    assert q.pop_local(0) is None            # nothing re-homed
+    assert [q.pop_local(1) for _ in range(2)] == ts[1:]
+
+
+def test_runtime_stats_surface_steal_batch_counters():
+    from repro.core import UMTRuntime
+
+    with UMTRuntime(n_cores=2, umt=True, trace=False) as rt:
+        rt.wait_all()
+        s = rt.stats()
+    assert s["steal_batches"] == rt.ready.steal_batches.value
+    assert s["steal_batch_tasks"] == rt.ready.steal_batch_tasks.value
 
 
 def test_sharded_queue_approx_len_lock_free():
