@@ -81,11 +81,12 @@ def measure_sleep_granularity_us(task_us: float, reps: int = 15) -> float:
 
 
 def _one_run(cores: int, umt: bool, sched: str, n_tasks: int,
-             task_us: float, blocking: bool) -> SchedResult:
+             task_us: float, blocking: bool,
+             hysteresis: int = 1) -> SchedResult:
     sleep_s = task_us * 1e-6
     lat_ns = []
-    with UMTRuntime(n_cores=cores, umt=umt, sched=sched,
-                    trace=False) as rt:
+    with UMTRuntime(n_cores=cores, umt=umt, sched=sched, trace=False,
+                    surrender_hysteresis=hysteresis) as rt:
         if blocking:
             def tiny():
                 io.sleep(sleep_s)       # monitored: full UMT event traffic
@@ -103,7 +104,8 @@ def _one_run(cores: int, umt: bool, sched: str, n_tasks: int,
         s = rt.stats()
     lat_ns.sort()
     name = (f"sched_{'umt' if umt else 'base'}_{sched}"
-            f"{'_blk' if blocking else ''}")
+            f"{'_blk' if blocking else ''}"
+            f"{f'_h{hysteresis}' if hysteresis != 1 else ''}")
     return SchedResult(
         name=name, cores=cores, umt=umt, sched=sched, blocking=blocking,
         tasks_s=n_tasks / dt,
@@ -115,9 +117,10 @@ def _one_run(cores: int, umt: bool, sched: str, n_tasks: int,
 
 
 def bench(cores: int, umt: bool, sched: str, n_tasks: int, task_us: float,
-          reps: int, blocking: bool) -> SchedResult:
+          reps: int, blocking: bool, hysteresis: int = 1) -> SchedResult:
     """Median-throughput result over ``reps`` runs."""
-    runs = [_one_run(cores, umt, sched, n_tasks, task_us, blocking)
+    runs = [_one_run(cores, umt, sched, n_tasks, task_us, blocking,
+                     hysteresis)
             for _ in range(reps)]
     runs.sort(key=lambda r: r.tasks_s)
     return runs[len(runs) // 2]
@@ -142,6 +145,34 @@ def run_matrix(core_list, n_tasks, task_us, reps, blocking,
                   f"sharded/global = {sp:.2f}x", flush=True)
 
 
+def bench_hysteresis_ab(cores: int, n_tasks: int, task_us: float,
+                        reps: int, hysteresis: int) -> None:
+    """Surrender-hysteresis A/B on the monitored-blocking stress case:
+    the same sub-ms blocking task graph with the paper-strict eager rule
+    (hysteresis 1: park at the first oversubscribed scheduling point)
+    vs parking only after ``hysteresis`` consecutive ones.  Every parked
+    worker costs a park+wake round trip, so the win shows up as fewer
+    wakes+surrenders per task at comparable-or-better throughput."""
+    legs = {}
+    for h in (1, hysteresis):
+        r = bench(cores, True, "sharded", n_tasks, task_us, reps,
+                  blocking=True, hysteresis=h)
+        legs[h] = r
+        # not appended to ``results``: run.py aggregates rows by
+        # (cores, umt, sched, blocking), so these legs would silently
+        # replace the paper-strict blocking leg in the derived speedups
+        print(r.row(), flush=True)
+    h1, hn = legs[1], legs[hysteresis]
+    churn1 = (h1.wakes + h1.surrenders) / n_tasks
+    churnN = (hn.wakes + hn.surrenders) / n_tasks
+    sp = hn.tasks_s / h1.tasks_s
+    print(f"  -> hysteresis A/B c={cores}: h{hysteresis}/h1 tasks_s = "
+          f"{sp:.2f}x, park/wake churn per task {churn1:.2f} -> "
+          f"{churnN:.2f}", flush=True)
+    print(f"HYSTERESIS,c={cores},h={hysteresis},speedup={sp:.2f},"
+          f"churn1={churn1:.2f},churnN={churnN:.2f}", flush=True)
+
+
 def main(argv=None) -> list[SchedResult]:
     ap = argparse.ArgumentParser()
     ap.add_argument("--cores", default="1,2,4,8")
@@ -152,6 +183,9 @@ def main(argv=None) -> list[SchedResult]:
                     help="monitored (blocking) task bodies only")
     ap.add_argument("--both", action="store_true",
                     help="run compute AND blocking task bodies")
+    ap.add_argument("--hysteresis", type=int, default=4,
+                    help="blocking mode: A/B the surrender-hysteresis "
+                         "leg at this N vs the paper-strict 1")
     ap.add_argument("--fast", action="store_true")
     args = ap.parse_args(argv)
     try:
@@ -178,6 +212,9 @@ def main(argv=None) -> list[SchedResult]:
     for blocking in modes:
         run_matrix(core_list, n_tasks, args.task_us, reps, blocking,
                    results, speedups, effective_task_us=eff_us)
+        if blocking and args.hysteresis > 1:
+            bench_hysteresis_ab(max(core_list), n_tasks, args.task_us,
+                                reps, args.hysteresis)
     for (cores, umt, blocking), sp in sorted(speedups.items()):
         tag = ("umt" if umt else "base") + ("_blk" if blocking else "")
         print(f"SPEEDUP,{tag},c={cores},{sp:.2f}")

@@ -36,7 +36,12 @@ Beyond the load sweep, three targeted phases (ISSUE 3/4 acceptance):
   * buffer-donation A/B — dense and paged, at >= 2 loads, donation on
     vs off: tokens/s and p50/p99 tick per leg, identical greedy tokens,
     and a direct aliasing probe asserting the donated decode reuses the
-    cache buffers in place (the per-tick full-pool copy is gone).
+    cache buffers in place (the per-tick full-pool copy is gone);
+  * scheduler-policy A/B (ISSUE 5) — on-demand paging + preemption-by-
+    eviction vs worst-case reservation at equal KV memory: strictly more
+    live slots (hard-asserted), then an eviction storm on a budget two
+    requests cannot share (evictions > 0 hard-asserted, churn tail
+    latency vs admission serialisation, tokens bit-identical throughout).
 
   python -m benchmarks.serve [--loads 32,256] [--requests 32] [--slots 4]
                              [--prompt-len 16] [--gen 16] [--cores 4]
@@ -80,6 +85,10 @@ class ServeResult:
     max_live: int = 0
     prefill_calls: int = 0
     p99_tick_ms: float | None = None
+    evictions: int = 0
+    restores: int = 0
+    pages_grown: int = 0
+    admission_blocks: int = 0
 
     def row(self) -> str:
         extra = ""
@@ -87,6 +96,9 @@ class ServeResult:
             extra = f",pages={self.pages_peak}/{self.pages_capacity}"
         if self.p99_tick_ms is not None:
             extra += f",p99_tick={self.p99_tick_ms:.1f}ms"
+        if self.evictions or self.pages_grown:
+            extra += (f",evict={self.evictions},grown={self.pages_grown}"
+                      f",adm_blk={self.admission_blocks}")
         return (f"{self.name},load={self.load:g},req={self.requests},"
                 f"tokens_s={self.tokens_s:.0f},occ={self.occupancy:.2f},"
                 f"p50={self.p50_s * 1e3:.0f}ms,p99={self.p99_s * 1e3:.0f}ms"
@@ -117,13 +129,13 @@ def _feed(submit, close, reqs, gaps):
 def run_engine(cfg, params, steps, prompts, gaps, *, gens, slots, cache_len,
                umt, cores, patches=None, name=None, page_size="auto",
                num_pages=None, prefill_chunk=None,
-               sync_ticks=False) -> tuple[ServeResult, list]:
+               sync_ticks=False, policy=None) -> tuple[ServeResult, list]:
     reqs = _mk_requests(prompts, patches, gens)
     with ServeEngine(cfg, params, slots=slots, cache_len=cache_len,
                      umt=umt, n_cores=cores, jit_steps=steps,
                      page_size=page_size, num_pages=num_pages,
                      prefill_chunk=prefill_chunk,
-                     sync_ticks=sync_ticks) as eng:
+                     sync_ticks=sync_ticks, policy=policy) as eng:
         # timed region matches run_oneshot: first arrival -> drain (engine
         # construction/teardown excluded, like the oneshot jits are)
         t0 = time.monotonic()
@@ -142,7 +154,10 @@ def run_engine(cfg, params, steps, prompts, gaps, *, gens, slots, cache_len,
         pages_capacity=st.get("pages_capacity"),
         max_live=st["max_live_slots"], prefill_calls=st["prefill_calls"],
         p99_tick_ms=(st["p99_tick_s"] * 1e3
-                     if st["p99_tick_s"] is not None else None))
+                     if st["p99_tick_s"] is not None else None),
+        evictions=st["evictions"], restores=st["restores"],
+        pages_grown=st["pages_grown"],
+        admission_blocks=st["admission_blocks"])
     return res, toks
 
 
@@ -489,6 +504,100 @@ def bench_donation_ab(cfg, params, prompts, patches, gens, *, loads, slots,
     return out
 
 
+def bench_policy_phases(cfg, params, steps, prefill, serve_step, *, slots,
+                        cache_len, page_size, prompt_len, gen, cores,
+                        n_req, seed) -> list[ServeResult]:
+    """ISSUE 5 acceptance phases: the scheduler-policy layer's first
+    nontrivial policy — on-demand paging + preemption-by-eviction —
+    measured against worst-case reservation at equal KV memory.
+
+    Phase 1 (utilisation): a page budget that worst-case reservation can
+    fill with exactly ``slots`` live requests; on-demand admission only
+    reserves each prompt's pages, so it must sustain *strictly more*
+    live slots on the same memory (hard-asserted — the admission path is
+    capacity-driven, not timing-driven).
+
+    Phase 2 (eviction storm): a budget two requests can enter but not
+    finish in (``prompt_pages + worst_pages - 1``) — growth must
+    collide, the policy must evict (``evictions > 0`` hard-asserted),
+    and the tail latency of eviction churn is reported against the
+    worst-case leg's admission serialisation on the same memory.
+    Greedy tokens are asserted identical to the one-shot row in every
+    leg — preemption may cost time, never correctness."""
+    prompts, patches = _prompts(cfg, n_req, prompt_len, seed=11)
+    prompts = np.asarray(prompts)
+    patches = None if patches is None else np.asarray(patches)
+    gens = np.full(n_req, gen)
+    ref = np.asarray(greedy_oneshot(
+        prefill, serve_step, params, jnp.asarray(prompts),
+        None if patches is None else jnp.asarray(patches), gen))
+    total = prompt_len + (cfg.n_patches
+                          if cfg.frontend == "vision_patches" else 0)
+    p = -(-total // page_size)                  # prompt pages
+    w = -(-(total + gen - 1) // page_size)      # worst-case pages
+    assert w > p, (
+        f"page_size {page_size} never grows mid-decode for prompt "
+        f"{total}+gen {gen} — pick a smaller --page-size for the "
+        "policy phases")
+
+    def leg(policy, name, budget, slots_leg):
+        res, toks = run_engine(
+            cfg, params, steps, prompts, np.zeros(n_req), gens=gens,
+            slots=slots_leg, cache_len=cache_len, umt=True, cores=cores,
+            patches=patches, name=name, page_size=page_size,
+            num_pages=budget + 1, policy=policy)
+        for i, t in enumerate(toks):
+            assert np.array_equal(t, ref[i]), (
+                f"{name}: token mismatch @ request {i} — eviction "
+                "changed the stream")
+        print(res.row(), flush=True)
+        return res
+
+    out = []
+    # ---- phase 1: equal-KV-memory utilisation
+    # budget invariant: worst-case reservation caps at `slots` live
+    # (budget // w == slots, since p <= w - 1), while on-demand can
+    # always admit a fresh prompt past `slots` fully-grown slots
+    # (slots * w + p <= budget) — the strict max_live win is
+    # admission-arithmetic, not a timing accident
+    budget = slots * w + p
+    legs = {pol: leg(pol, f"serve_{pol}_equal_mem", budget, 2 * slots)
+            for pol in ("reserve", "ondemand")}
+    out += legs.values()
+    ok = legs["ondemand"].max_live > legs["reserve"].max_live
+    print(f"  -> equal-KV-memory policy A/B ({budget} pages x "
+          f"{page_size} tok): worst-case max_live="
+          f"{legs['reserve'].max_live}, on-demand max_live="
+          f"{legs['ondemand'].max_live} — "
+          f"{'PASS (strictly more live slots)' if ok else 'FAIL'}",
+          flush=True)
+    assert ok, "on-demand paging did not lift live slots at equal memory"
+    assert legs["reserve"].pages_grown == 0, (
+        "worst-case reservation silently fell back to growth")
+
+    # ---- phase 2: eviction storm
+    budget = p + w - 1                 # two enter, both cannot finish
+    legs = {pol: leg(pol, f"serve_{pol}_eviction_storm"
+                     if pol == "ondemand" else f"serve_{pol}_storm_mem",
+                     budget, slots)
+            for pol in ("reserve", "ondemand")}
+    out += legs.values()
+    storm, rsv = legs["ondemand"], legs["reserve"]
+    assert storm.evictions > 0, (
+        "storm budget never forced an eviction — the mechanism did not "
+        "fire")
+    assert storm.restores == storm.evictions
+    assert storm.pages_grown > 0
+    print(f"  -> eviction storm ({budget} pages): evictions="
+          f"{storm.evictions} restores={storm.restores} pages_grown="
+          f"{storm.pages_grown} admission_blocks="
+          f"{storm.admission_blocks}; p99 latency {storm.p99_s * 1e3:.0f}"
+          f"ms (churn) vs {rsv.p99_s * 1e3:.0f}ms (worst-case "
+          "serialisation) at equal memory — tokens bit-identical",
+          flush=True)
+    return out
+
+
 def main(argv=None) -> list[ServeResult]:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-14b")
@@ -524,6 +633,9 @@ def main(argv=None) -> list[ServeResult]:
         # prefill workers
         args.prompt_len, args.gen, args.cores = 8, 4, 3
         args.long_factor = 8
+        # small pages so the policy phases' mid-decode growth fires at
+        # these tiny prompt/gen sizes (auto would cover gen in slack)
+        args.page_size = args.page_size or 2
     loads = [float(x) for x in args.loads.split(",")]
 
     cfg = get(args.arch).tiny()
@@ -626,6 +738,14 @@ def main(argv=None) -> list[ServeResult]:
             prompt_len=max(2, args.prompt_len // 2),
             gen=max(2, args.gen // 4), cores=args.cores,
             n_req=args.requests))
+
+        # phase: policy A/B — on-demand paging + preemption-by-eviction
+        # vs worst-case reservation (utilisation + eviction storm)
+        results.extend(bench_policy_phases(
+            cfg, params, steps, prefill, serve_step, slots=args.slots,
+            cache_len=cache_len, page_size=page_size,
+            prompt_len=args.prompt_len, gen=args.gen, cores=args.cores,
+            n_req=args.requests, seed=args.seed))
 
         # phase: chunked prefill bounds decode-tick jitter (chunk-exact,
         # token-only frontends: the mix builder has no patch plumbing)

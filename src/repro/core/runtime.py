@@ -70,6 +70,9 @@ class Worker(threading.Thread):
         self.monitored = rt.umt
         self.current_task: Task | None = None
         self.surrender_flag = False
+        # consecutive oversubscribed scheduling points observed (surrender
+        # hysteresis, paper-strict at rt.surrender_hysteresis == 1)
+        self.oversub_streak = 0
 
     # ---- channel plumbing used by the __schedule() shim ----
     def block_channel(self):
@@ -221,19 +224,34 @@ class UMTRuntime:
     sched: "sharded" — per-core ready deques + work stealing (the fast
     path, see module docstring); "global" — the single global FIFO the
     paper's Nanos6 uses (kept for comparison benchmarks).
+
+    topology: optional (n_cores, n_cores) distance matrix; the sharded
+    scheduler's steal walk then visits victims nearest-distance-first
+    (cache/NUMA-aware, scx-style) instead of nearest-index.
+
+    surrender_hysteresis: a worker self-surrenders only after this many
+    *consecutive* oversubscribed scheduling points (default 1 = the
+    paper's eager rule).  On sub-ms blocking tasks the eager rule pays
+    one park+wake round trip per task — a worker that is about to become
+    oversubscription-free again (its blocked peer finishes in microseconds)
+    parks anyway; hysteresis > 1 trades paper-strict eagerness for less
+    churn (measured by ``benchmarks/sched.py --blocking``).
     """
 
     def __init__(self, n_cores: int | None = None, umt: bool = True,
                  max_workers_per_core: int = 8, scan_interval: float = 0.001,
                  trace: bool = True, notify: str = "all",
-                 sched: str = "sharded", scan_min_gap: float | None = None):
+                 sched: str = "sharded", scan_min_gap: float | None = None,
+                 topology=None, surrender_hysteresis: int = 1):
         assert notify in ("all", "idle_only")
         assert sched in ("sharded", "global")
+        assert surrender_hysteresis >= 1
         self.n_cores = n_cores or os.cpu_count() or 1
         self.umt = umt
         self.notify = notify
         self.sched = sched
         self.sharded = sched == "sharded"
+        self.surrender_hysteresis = surrender_hysteresis
         # Leader scan rate limit (see Leader docstring); 0 disables
         self.scan_min_gap = (scan_interval / 2 if scan_min_gap is None
                              else scan_min_gap)
@@ -245,8 +263,8 @@ class UMTRuntime:
         self.max_workers = max_workers_per_core * self.n_cores
         self.running = True
         self.tracer = Tracer(trace)
-        self.ready = (ShardedReadyQueue(self.n_cores) if self.sharded
-                      else ReadyQueue())
+        self.ready = (ShardedReadyQueue(self.n_cores, topology=topology)
+                      if self.sharded else ReadyQueue())
         self.deps = DependencyTracker()
         self.channels = umt_enable(self.n_cores)
         self.ready_count = [0] * self.n_cores     # user-space per-core count
@@ -259,7 +277,8 @@ class UMTRuntime:
         self._quiet = threading.Event()           # never shared with the
         self._quiet.set()                         # per-core counter paths
         self._wake_r, self._wake_w = os.pipe2(os.O_NONBLOCK)
-        self.stats_extra = {"wakes": 0, "surrenders": 0, "spawned": 0,
+        self.stats_extra = {"wakes": 0, "surrenders": 0,
+                            "surrender_deferrals": 0, "spawned": 0,
                             "leader_wakeups": 0, "leader_drains": 0,
                             "leader_scans": 0}
 
@@ -537,7 +556,16 @@ class UMTRuntime:
 
     def sched_point(self, w: Worker) -> bool:
         """Paper §III-C: drain own-core counters; surrender if >1 ready.
-        Returns True when the worker should park."""
+        Returns True when the worker should park.
+
+        Surrender hysteresis: oversubscription must be observed at
+        ``surrender_hysteresis`` *consecutive* scheduling points before
+        the worker actually parks (any non-oversubscribed point resets
+        the streak).  At the default of 1 this is the paper's eager rule
+        verbatim; higher values keep a worker on its core across the
+        sub-ms blips where a blocked peer returns and finishes almost
+        immediately, cutting park/wake churn (deferred surrenders are
+        counted in ``surrender_deferrals``)."""
         if not self.umt or not isinstance(w, Worker):
             return False
         if self.notify == "idle_only":
@@ -545,18 +573,21 @@ class UMTRuntime:
             # eventfd only carries idle/busy edges.
             with self._krun_locks[w.core]:
                 over = self._krun[w.core] > 1
-            if over:
-                self.stats_extra["surrenders"] += 1
-                self.tracer.ev("surrender", w.wid, w.core)
-            return over
-        self.drain_core(w.core, lazy=self.sharded)
-        with self._count_locks[w.core]:
-            over = self.ready_count[w.core] > 1
-        if over:
-            self.stats_extra["surrenders"] += 1
-            self.tracer.ev("surrender", w.wid, w.core)
-            return True
-        return False
+        else:
+            self.drain_core(w.core, lazy=self.sharded)
+            with self._count_locks[w.core]:
+                over = self.ready_count[w.core] > 1
+        if not over:
+            w.oversub_streak = 0
+            return False
+        w.oversub_streak += 1
+        if w.oversub_streak < self.surrender_hysteresis:
+            self.stats_extra["surrender_deferrals"] += 1
+            return False
+        w.oversub_streak = 0
+        self.stats_extra["surrenders"] += 1
+        self.tracer.ev("surrender", w.wid, w.core)
+        return True
 
     # ------------------------------------------------------------ parking
     def parked(self, w: Worker) -> bool:

@@ -163,14 +163,28 @@ class ShardedReadyQueue:
     so a burst fanned out on one core spreads in O(log) steals instead of
     one steal per task (scx-style load balancing).  Counted by
     ``steal_batches`` / ``steal_batch_tasks`` (surfaced in runtime
-    stats); the walk order stays nearest-neighbour-first.
+    stats).
+
+    Topology-aware steal order: with ``topology`` set to an
+    (n_shards, n_shards) distance matrix (``topology[i][j]`` = cost of
+    shard ``i`` stealing from shard ``j`` — cache/NUMA distance on a real
+    machine), each shard walks its victims nearest-*distance*-first, so a
+    steal prefers an SMT sibling or same-socket core before crossing an
+    interconnect (scx-style ``SCX_DSQ`` distance ordering).  Ties (and
+    the ``topology=None`` default) fall back to the nearest-*index* ring
+    walk, which keeps the pre-topology behaviour bit-for-bit.
     """
 
-    def __init__(self, n_shards: int, steal_half_min: int = 4):
+    def __init__(self, n_shards: int, steal_half_min: int = 4,
+                 topology=None):
         assert n_shards >= 1
         assert steal_half_min >= 2
         self.n_shards = n_shards
         self.steal_half_min = steal_half_min
+        # one precomputed victim walk per thief shard; the steal hot path
+        # only ever indexes it
+        self._steal_order = tuple(
+            self._victim_walk(s, topology) for s in range(n_shards))
         self._qs = [collections.deque() for _ in range(n_shards)]
         self._locks = [threading.Lock() for _ in range(n_shards)]
         self._approx_len = AtomicCounter()
@@ -178,6 +192,20 @@ class ShardedReadyQueue:
         self.steals = AtomicCounter()
         self.steal_batches = AtomicCounter()      # steals that took > 1
         self.steal_batch_tasks = AtomicCounter()  # extra tasks re-homed
+
+    def _victim_walk(self, shard: int, topology) -> tuple:
+        """Victim visit order for ``shard``: every other shard, sorted by
+        (distance, ring offset).  ``topology=None`` degenerates to the
+        ring walk ``shard+1, shard+2, ... (mod n)`` exactly."""
+        ring = [(shard + i) % self.n_shards
+                for i in range(1, self.n_shards)]
+        if topology is None:
+            return tuple(ring)
+        row = topology[shard]
+        assert len(row) >= self.n_shards, (
+            f"topology row {shard} covers {len(row)} shards, "
+            f"need {self.n_shards}")
+        return tuple(sorted(ring, key=lambda v: (row[v], ring.index(v))))
 
     def select_shard(self) -> int:
         """Round-robin home shard for external (non-worker) producers."""
@@ -209,7 +237,8 @@ class ShardedReadyQueue:
         return None
 
     def steal(self, shard: int):
-        """Walk the other shards (nearest neighbour first) and steal from
+        """Walk the other shards (nearest neighbour first — by topology
+        distance when one was given, ring index otherwise) and steal from
         the first non-empty one -> (task, victim) or (None, -1).
 
         The oldest task is claimed and returned; when the victim still
@@ -218,8 +247,7 @@ class ShardedReadyQueue:
         ``(victim_len // 2) - 1`` oldest tasks onto the thief's shard —
         half the victim's load moves in one locked pass, FIFO order
         preserved on both sides."""
-        for i in range(1, self.n_shards):
-            victim = (shard + i) % self.n_shards
+        for victim in self._steal_order[shard]:
             if not self._qs[victim]:
                 continue
             moved = ()

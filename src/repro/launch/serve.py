@@ -90,7 +90,8 @@ def serve_engine(cfg, params, mesh, args):
                      num_pages=args.pages if args.pages > 0 else None,
                      prefill_chunk=args.chunk if args.chunk > 0
                      else None,
-                     donate=not args.no_donate) as eng:
+                     donate=not args.no_donate,
+                     policy=args.policy) as eng:
         reqs = []
         for i in range(args.requests):
             reqs.append(Request(
@@ -113,8 +114,13 @@ def serve_engine(cfg, params, mesh, args):
         "umt": not args.no_umt,
         "page_size": stats["page_size"],
         "donate": stats["donate"],
+        "policy": stats["policy"],
         "kv_versions": stats["kv_version"],
         "pages_used_peak": stats.get("pages_used_peak"),
+        "pages_grown": stats["pages_grown"],
+        "admission_blocks": stats["admission_blocks"],
+        "evictions": stats["evictions"],
+        "restores": stats["restores"],
         "prefill_calls": stats["prefill_calls"],
         "prefill_chunks": stats["prefill_chunks"],
         "wall_s": round(wall, 3),
@@ -159,6 +165,11 @@ def serve(argv=None):
                     help="engine: disable buffer donation on the "
                          "decode/insert/chunk cache argument (the "
                          "copying legacy path, kept for A/B)")
+    ap.add_argument("--policy", choices=("reserve", "ondemand"),
+                    default="reserve",
+                    help="engine: scheduler policy — worst-case page "
+                         "reservation at admission, or on-demand paging "
+                         "with preemption-by-eviction (paged only)")
     args = ap.parse_args(argv)
     if args.requests <= 0:
         args.requests = args.batch

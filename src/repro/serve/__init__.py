@@ -50,6 +50,15 @@ donated version is consumed by the computation that produced its
 successor and is never pinned.  ``donate=False`` keeps the copying
 legacy path as the benchmark A/B leg.
 
+Mechanism/policy split
+----------------------
+Scheduling *decisions* — admit or defer, prefill batch composition,
+chunk boundaries, slot placement, evict/restore — live in one
+replaceable layer (:mod:`repro.serve.policy`); the engine, KV state and
+pager keep only *mechanism* (task graph, donation/pinning, block tables,
+free list).  This mirrors the paper's own split (kernel mechanism,
+user-space runtime policy) one level up.
+
 Paged KV cache
 --------------
 The linear attention cache leaves are paged (vLLM-style): physical pages
@@ -59,10 +68,15 @@ request finishes (including early ``eos_id``/``stop`` stops), addressed
 through per-slot block tables.  KV memory is bounded by live tokens
 rather than ``slots * cache_len``, so at equal memory the pool runs
 strictly more concurrent slots than the dense layout
-(``page_size=None``, kept for A/B benchmarks).  Admission *blocks* on
-pool exhaustion — worst-case reservation makes that deadlock-free — and
-page reuse across slots can never corrupt: dead slots' tables point at
-the reserved garbage page 0.
+(``page_size=None``, kept for A/B benchmarks).  The default policy
+reserves the worst case at admission, which *blocks* on pool exhaustion,
+deadlock-free; ``policy="ondemand"`` reserves only the prefill extent
+and grows a slot's block table as decode crosses page boundaries — at
+equal memory it sustains strictly more live slots, and exhaustion
+mid-decode is unblocked by preemption: the policy's victim is evicted
+and restored later by replaying prefill over prompt + generated tokens
+(recompute-on-restore, bit-exact — tested).  Page reuse across slots can
+never corrupt: dead slots' tables point at the reserved garbage page 0.
 
 Usage
 -----
@@ -89,8 +103,11 @@ comparison); the load benchmark is ``python -m benchmarks.serve``.
 from .engine import ServeEngine, auto_page_size, make_jit_steps
 from .kvstate import KVState, alias_safe
 from .pager import GARBAGE_PAGE, PagePool
+from .policy import (POLICIES, OnDemandPolicy, SchedulerPolicy, SlotView,
+                     make_policy)
 from .request import Request, RequestQueue
 
 __all__ = ["ServeEngine", "Request", "RequestQueue", "make_jit_steps",
            "KVState", "alias_safe", "PagePool", "GARBAGE_PAGE",
-           "auto_page_size"]
+           "auto_page_size", "SchedulerPolicy", "OnDemandPolicy",
+           "SlotView", "make_policy", "POLICIES"]

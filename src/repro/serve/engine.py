@@ -1,13 +1,33 @@
-"""Continuous-batching serve engine on the UMT runtime.
+"""Continuous-batching serve engine on the UMT runtime — the *mechanism*
+half of an explicit mechanism/policy split.
+
+Every scheduling decision — admit or defer, how arrival rounds batch and
+chunk, which slot an admission lands in, and (under memory pressure)
+which victim is evicted — lives in :mod:`repro.serve.policy`; this module
+keeps only mechanism: the UMT task graph, jit dispatch, donation/pinning
+discipline, slot bookkeeping, and the evict/restore machinery the policy
+drives.  The engine calls the policy at each decision point and executes
+whatever comes back; swapping policies never touches device code.
 
 A fixed pool of ``slots`` serve slots shares one batched KV cache.  The
 linear attention cache leaves are **paged** (vLLM-style): physical pages
-of ``page_size`` token slots, allocated from a free-list
-(:class:`repro.serve.pager.PagePool`) at admission and freed the moment a
-request finishes — so KV memory is bounded by *live tokens*, not by
-``slots * cache_len``, and the pool can run more concurrent slots at
-equal memory than the dense layout.  Bounded cache leaves (SWA rings,
-SSM conv/state) stay dense per-slot rows.
+of ``page_size`` token slots from a free-list
+(:class:`repro.serve.pager.PagePool`), freed the moment a request
+finishes — so KV memory is bounded by *live tokens*, not by
+``slots * cache_len``.  Bounded cache leaves (SWA rings, SSM conv/state)
+stay dense per-slot rows.  How much is reserved at admission is the
+policy's call: worst case (admission blocks on exhaustion, the default)
+or on-demand (``policy="ondemand"``) — the prefill extent only, with the
+slot's block table **grown page by page as decode crosses page
+boundaries**.  On-demand exhaustion mid-decode is a *block* surfaced to
+the policy, which unblocks it by **preemption**: the victim's pages are
+freed, its request re-enters admission carrying generated-so-far tokens,
+and the restore recomputes — one prefill over prompt + generated where
+prefill is extent-invariant (the ``chunkable`` condition), a prefill of
+the original prompt plus a decode-replay of the recorded tokens where
+it is not (MoE capacity, SSD chunking, SWA rings) — so greedy output
+stays bit-identical to the never-evicted run (tested across the fuzz
+grid).
 
 The cache pytree has a **single owner** — :class:`repro.serve.kvstate.
 KVState` — and the decode/insert/chunk jits **donate** it
@@ -62,8 +82,9 @@ import numpy as np
 from ..core import UMTRuntime, io
 from ..steps import (chunkable, init_cache, make_batched_insert_step,
                      make_decode_step, make_prefill_chunk_step,
-                     make_prefill_step)
+                     make_prefill_step, make_serve_step)
 from .kvstate import KVState, alias_safe
+from .policy import SchedulerPolicy, SlotView, make_policy
 from .request import Request, RequestQueue
 
 try:  # jax is present everywhere we run; guard only for doc tooling
@@ -117,6 +138,10 @@ def make_jit_steps(cfg, mesh=None, cache_len: int = 64, *,
                                              cache_len=cache_len)),
         "insert": ins,
         "decode": dec,
+        # decode-replay restore (see ServeEngine._replay_generated) —
+        # jit is lazy, so this compiles only if an eviction on a
+        # non-extent-invariant config actually restores through it
+        "replay": jax.jit(make_serve_step(cfg, mesh)),
         "chunk": (jax.jit(make_prefill_chunk_step(cfg, mesh, cache_len),
                           donate_argnums=(1,) if donate else (),
                           static_argnames=("attn_extent", "want_logits"))
@@ -159,6 +184,12 @@ class ServeEngine:
         (default True): the cache is updated in place instead of copied
         per tick.  Must match ``jit_steps`` when both are given;
         ``donate=False`` is the measured A/B leg.
+    policy : SchedulerPolicy | str | None, optional
+        The decision layer (see :mod:`repro.serve.policy`): None/"reserve"
+        keeps worst-case page reservation at admission; "ondemand" turns
+        on on-demand paging with preemption-by-eviction (paged engines
+        only).  Any ``SchedulerPolicy`` instance plugs in custom
+        decisions without touching the mechanism here.
     sync_ticks : bool
         Block on each decode tick before timestamping it — makes the
         tick-interval stats measure real compute cadence (benchmarks);
@@ -179,7 +210,8 @@ class ServeEngine:
                  num_pages: int | None = None,
                  prefill_chunk: int | None = None,
                  max_prefill_batch: int | None = None,
-                 sync_ticks: bool = False, donate: bool | None = None):
+                 sync_ticks: bool = False, donate: bool | None = None,
+                 policy=None):
         self.cfg = cfg
         self.slots = slots
         self.cache_len = cache_len
@@ -215,6 +247,15 @@ class ServeEngine:
         self.page_size: int | None = page_size
         self.paged = page_size is not None
         self.donate = True if donate is None else donate
+        self.policy = make_policy(policy)
+        if self.policy.on_demand and not self.paged:
+            raise ValueError(
+                f"policy {self.policy.name!r} is on-demand paging — it "
+                "needs a paged engine (page_size is None here)")
+        # hot-path guard: only build per-tick SlotView snapshots for
+        # policies that actually override the unforced-preemption hook
+        self._policy_may_evict = (type(self.policy).maybe_evict
+                                  is not SchedulerPolicy.maybe_evict)
 
         self.prefill_chunk = prefill_chunk
         if prefill_chunk is not None:
@@ -235,7 +276,15 @@ class ServeEngine:
         self.prefill = jit_steps["prefill"]
         self.insert = jit_steps["insert"]
         self.decode = jit_steps["decode"]
+        self.replay = jit_steps.get("replay") or jax.jit(
+            make_serve_step(cfg, mesh))
         self.chunk = jit_steps.get("chunk")
+        # restore shape after an eviction: one prefill over
+        # prompt+generated where prefill is extent-invariant (the
+        # chunked-prefill condition — MoE capacity, SSD chunking and SWA
+        # rings are extent-bound), decode-replay of the recorded tokens
+        # otherwise (bit-exact by construction, a tick per token)
+        self._restore_prefill = chunkable(cfg, cache_len)
         if prefill_chunk is not None and self.chunk is None:
             self.chunk = jax.jit(
                 make_prefill_chunk_step(cfg, mesh, cache_len),
@@ -270,6 +319,13 @@ class ServeEngine:
         self._active = np.zeros((slots,), bool)
         self._active_dev = jnp.array(self._active)
         self._slot_req: list[Request | None] = [None] * slots
+        # host-side per-slot scheduling state the policy decides over:
+        # the cache position the next tick will write (drives on-demand
+        # growth) and the admission sequence (drives victim ordering)
+        self._slot_pos = np.zeros((slots,), np.int64)
+        self._slot_seq = np.zeros((slots,), np.int64)
+        self._admit_seq = 0
+        self._blocked_head = None       # rid whose admission block we counted
         self._inserts: collections.deque = collections.deque()
         self._lock = threading.Lock()          # inserts/counters only
         self._pending_prefills = 0
@@ -298,6 +354,12 @@ class ServeEngine:
         self.stats_prefill_chunks = 0
         self.stats_prefill_chunk_tasks = 0
         self.stats_stopped_early = 0
+        # policy-mechanism counters: the bench phases assert these fired
+        # (no silent fallback to worst-case reservation)
+        self.stats_admission_blocks = 0
+        self.stats_evictions = 0
+        self.stats_restores = 0
+        self.stats_pages_grown = 0
 
         # donation sanity, once per jit_steps dict (abstract eval only,
         # no compile): every cache leaf must come out of each donating
@@ -399,8 +461,9 @@ class ServeEngine:
         while True:
             # monitored block for the first arrival, then coalesce the
             # round's worth of already-queued prompts into one prefill
-            # task (batched prefill)
-            batch = self.queue.get_batch(self.max_prefill_batch)
+            # task (batched prefill; the round cap is a policy decision)
+            batch = self.queue.get_batch(
+                self.policy.prefill_batch_cap(self))
             if batch is None:
                 break
             with self._lock:
@@ -415,16 +478,27 @@ class ServeEngine:
     def _validate(self, req: Request):
         """Admission-impossible geometry fails loudly at prefill time (not
         assert: under python -O an oversized request would decode past the
-        cache and silently emit corrupt tokens)."""
+        cache and silently emit corrupt tokens).  Restore replays carry
+        their generated prefix in the prompt, so the budget check uses
+        the *remaining* token budget — the sum is invariant across
+        evictions.  The single-request worst-case-fits-the-pool check is
+        also what makes on-demand eviction deadlock-free: a lone live
+        slot can always grow."""
         p = self.cfg.n_patches \
             if self.cfg.frontend == "vision_patches" else 0
-        req.total_len = int(np.asarray(req.tokens).shape[0]) + p
-        if req.total_len + req.max_new > self.cache_len:
+        req.total_len = int(np.asarray(req.prefill_tokens).shape[0]) + p
+        # decode ticks still owed after this round's prefill: the fresh
+        # prefill emits one token for free, a restore replay emits none
+        # (its argmax is already in out_tokens) — either way the sum
+        # below is invariant across evictions
+        ticks = req.max_new - max(len(req.out_tokens), 1)
+        if req.total_len + ticks + 1 > self.cache_len:
             return ValueError(
-                f"request {req.rid}: prompt {req.total_len} + max_new "
-                f"{req.max_new} exceeds cache_len {self.cache_len}")
+                f"request {req.rid}: prompt {req.total_len} + "
+                f"{ticks + 1} tokens to go exceeds cache_len "
+                f"{self.cache_len}")
         if self.paged:
-            need = self.pager.pages_for(req.total_len + req.max_new - 1)
+            need = self.pager.pages_for(req.total_len + ticks)
             if need > self.pager.capacity:
                 return ValueError(
                     f"request {req.rid}: needs {need} KV pages but the "
@@ -463,7 +537,7 @@ class ServeEngine:
                     remaining.remove(req)
                     self._finish_failed(req, err)
                 else:
-                    key = (np.asarray(req.tokens).shape,
+                    key = (np.asarray(req.prefill_tokens).shape,
                            req.patches is not None)
                     groups.setdefault(key, []).append(req)
             exc0 = None
@@ -504,7 +578,7 @@ class ServeEngine:
         per chunk, see :meth:`_prefill_chunk_task`) and leaves
         ``remaining`` — the chain owns its accounting from then on."""
         bg = len(grp)
-        toks = np.stack([np.asarray(r.tokens) for r in grp])
+        toks = np.stack([np.asarray(r.prefill_tokens) for r in grp])
         patches = None
         if grp[0].patches is not None:
             patches = np.stack([np.asarray(r.patches) for r in grp])
@@ -518,12 +592,13 @@ class ServeEngine:
         tj = jnp.asarray(toks)
         pj = None if patches is None else jnp.asarray(patches)
 
-        if (self.prefill_chunk is not None
-                and grp[0].total_len > self.prefill_chunk):
+        chunk = (self.policy.chunk_len(self, grp[0].total_len)
+                 if self.chunk is not None else None)
+        if chunk is not None:
             st = {"rows_cache": init_cache(self.cfg, bpad, self.cache_len,
                                            jnp.dtype(self.cfg.dtype)),
                   "off": 0, "c0": 0, "first": True, "chunks": 0,
-                  "unaccounted": list(grp)}
+                  "chunk": int(chunk), "unaccounted": list(grp)}
             for r in grp:
                 remaining.remove(r)
             try:
@@ -549,7 +624,7 @@ class ServeEngine:
         try:
             plen = tj.shape[1]
             npatch = 0 if pj is None else pj.shape[1]
-            c = self.prefill_chunk
+            c = st["chunk"]
             c0, off, first = st["c0"], st["off"], st["first"]
             c1 = min(c0 + c, plen)
             covered = off + (c1 - c0) + (npatch if first else 0)
@@ -614,8 +689,45 @@ class ServeEngine:
             self.stats_prefill_calls += 1
             self.stats_prefill_reqs += len(grp)
         for i, r in enumerate(grp):
-            r.t_first = now
             remaining.remove(r)
+            if r.resume:
+                # restore (recompute-on-restore): every replayed token
+                # was already emitted (and stop-checked) before the
+                # eviction, so nothing is appended, TTFT keeps the
+                # original first-token stamp, and the row re-enters at
+                # the *head* of the admission queue so evicted requests
+                # outrank new arrivals (no restore starvation)
+                assert len(grp) == 1, "restore rounds are singleton"
+                if r.restore_tokens is None:
+                    # decode-replay: the prefill covered the original
+                    # prompt only and re-derived the first token; feed
+                    # the recorded stream back through the serve step
+                    assert np.array_equal(t0_host[i, 0],
+                                          r.out_tokens[0]), (
+                        f"request {r.rid}: restore prefill diverged "
+                        "from the emitted stream")
+                    rows_cache, tok = self._replay_generated(r,
+                                                             rows_cache)
+                    row_i = 0
+                    if tok is None:     # single emitted token: no replay
+                        row_i, tok = i, t0
+                    r.total_len += len(r.out_tokens) - 1
+                else:
+                    # prefill-replay: the prefill covered
+                    # prompt+generated[:-1]; its argmax re-derives the
+                    # last emitted token
+                    assert np.array_equal(t0_host[i, 0],
+                                          r.out_tokens[-1]), (
+                        f"request {r.rid}: restore prefill diverged "
+                        "from the emitted stream")
+                    row_i, tok = i, t0
+                r.resume = False
+                with self._lock:
+                    self.stats_restores += 1
+                    self._inserts.appendleft((r, rows_cache, row_i, tok))
+                    self._pending_prefills -= 1
+                continue
+            r.t_first = now
             first = t0_host[i, 0]
             if r.needs_host_tokens:
                 first = int(first)
@@ -638,6 +750,38 @@ class ServeEngine:
                     self._pending_prefills -= 1
         self._work.set()
 
+    def _replay_generated(self, req: Request, rows_cache):
+        """Decode-replay restore: re-feed the recorded tokens through the
+        serve step on the freshly-prefilled row cache, advancing its
+        ``pos`` to prompt+generated — the *same* computation the first
+        pass ran, so bit-exact on configs (MoE capacity, SSD chunking,
+        SWA rings) where a longer prefill would not be.  Returns the
+        advanced cache and the device token feeding the next tick (None
+        when only the prefill token was ever emitted).  Every replayed
+        argmax must reproduce the recorded stream."""
+        toks = req.out_tokens
+        if len(toks) <= 1:
+            return rows_cache, None
+        extra = ((self.cfg.n_codebooks,)
+                 if self.cfg.frontend == "audio_codebooks" else ())
+        cache, nxts = rows_cache, []
+        pins = []               # chain versions + fed tokens: keep refs
+        for k in range(len(toks) - 1):
+            fed = jnp.asarray(
+                np.asarray(toks[k]).reshape((1, 1) + extra))
+            pins.append((cache, fed))
+            nxt, cache = self.replay(self._params, cache, fed)
+            nxts.append(nxt)
+        # one sync for the whole chain (dispatch stays pipelined), then
+        # verify every replayed argmax against the recorded stream
+        jax.block_until_ready(cache["pos"])
+        pins.clear()
+        for k, nxt in enumerate(nxts):
+            assert np.array_equal(np.asarray(nxt)[0, 0], toks[k + 1]), (
+                f"request {req.rid}: decode replay diverged at "
+                f"token {k + 1}")
+        return cache, nxts[-1]
+
     @staticmethod
     def _hit_stop(req: Request) -> bool:
         """Early-stop check on the host-visible emitted stream (only ever
@@ -652,27 +796,36 @@ class ServeEngine:
                     return True
         return False
 
-    def _finish(self, req: Request):
-        """Complete a request inline (one stacked device->host sync per
-        request, not one per token); the response *write* — when a sink
-        is configured — is its own UMT task so slow consumers never stall
-        the decode loop.
+    def _materialise_tokens(self, req: Request):
+        """Host-ify the request's emitted stream (one stacked
+        device->host sync, not one per token) — called at completion and
+        at eviction, where the generated prefix feeds the restore prompt.
 
         ``out_tokens`` holds the *whole* per-tick token array per emitted
-        token (head entry is the already-host prefill token): slicing the
-        slot row happens here, forced immediately.  Never accumulate
-        unforced lazy slices of the hot-loop arrays instead — once the
-        backing array's last Python reference drops, its buffer can be
-        recycled under async dispatch while the slice is still pending,
-        and the value read back is whatever the pool wrote there next
-        (token corruption; found the hard way, see tests)."""
-        tail = req.out_tokens[1:]
-        if tail and not isinstance(tail[0], (int, np.integer)):
+        token (host entries — the prefill token, or tokens materialised
+        before an earlier eviction — are left alone): slicing the slot
+        row happens here, forced immediately.  Never accumulate unforced
+        lazy slices of the hot-loop arrays instead — once the backing
+        array's last Python reference drops, its buffer can be recycled
+        under async dispatch while the slice is still pending, and the
+        value read back is whatever the pool wrote there next (token
+        corruption; found the hard way, see tests)."""
+        out = req.out_tokens
+        idx = [i for i, t in enumerate(out) if isinstance(t, jax.Array)]
+        if idx:
             # numpy stack, not jnp: an eager jnp.stack compiles once per
             # distinct length (~35ms each) — paid mid-serve, it stalls
             # whole scheduling rounds
-            vals = np.stack([np.asarray(t) for t in tail])[:, req.slot, 0]
-            req.out_tokens = [req.out_tokens[0]] + list(vals)
+            vals = np.stack([np.asarray(out[i])
+                             for i in idx])[:, req.slot, 0]
+            for j, i in enumerate(idx):
+                out[i] = vals[j]
+
+    def _finish(self, req: Request):
+        """Complete a request inline; the response *write* — when a sink
+        is configured — is its own UMT task so slow consumers never stall
+        the decode loop."""
+        self._materialise_tokens(req)
         req.t_done = time.monotonic()
         with self._lock:
             self._n_completed += 1
@@ -702,11 +855,15 @@ class ServeEngine:
         self._active_dev = jnp.array(self._active)
 
     def _do_inserts(self):
-        """Admit prefilled rows into free slots, strictly FIFO.  Paged:
-        the head reserves its worst-case pages first — if the pool cannot
-        cover them, admission *blocks* (the row stays queued; nothing is
-        written) until a completion frees pages.  FIFO keeps a large
-        request from being starved by smaller ones slipping past it."""
+        """Admit prefilled rows into free slots, strictly head-first
+        (restores re-enter at the head, everything else FIFO — keeps a
+        large request from being starved by smaller ones slipping past
+        it).  Paged: the head reserves the pages the *policy* asks for —
+        the worst case (default) or just the prefill extent (on-demand).
+        If the pool cannot cover them, admission *blocks* (the row stays
+        queued; nothing is written) until a free — completion or
+        eviction — unblocks it; each distinct blocked head counts once in
+        ``admission_blocks``."""
         while True:
             free = np.flatnonzero(~self._active)
             if len(free) == 0:
@@ -717,12 +874,19 @@ class ServeEngine:
                 req, rows_cache, row, t0 = self._inserts[0]
             ids = None
             if self.paged:
-                ids = self.pager.reserve(req.total_len + req.max_new - 1)
-                if ids is None:
-                    return              # admission blocked on free pages
+                ids = self.pager.reserve(
+                    self.policy.admission_tokens(self, req))
+                if ids is None:         # admission blocked on free pages
+                    if self._blocked_head != req.rid:
+                        self._blocked_head = req.rid
+                        self.stats_admission_blocks += 1
+                    return
+            self._blocked_head = None
             with self._lock:
                 self._inserts.popleft()
-            s = int(free[0])
+            s = int(self.policy.select_slot(self, free))
+            assert not self._active[s], \
+                f"policy picked a live slot {s} for admission"
             kv = self.kv
             row_dev, slot_dev = jnp.int32(row), jnp.int32(s)
             # dispatch temporaries the pending insert reads whose Python
@@ -745,6 +909,92 @@ class ServeEngine:
             self._rebind_active()
             self._slot_req[s] = req
             req.slot = s
+            self._slot_pos[s] = req.total_len   # next cache write position
+            self._admit_seq += 1
+            self._slot_seq[s] = self._admit_seq
+
+    def _slot_views(self) -> list:
+        """Read-only live-slot snapshots for policy decisions."""
+        views = []
+        for s in np.flatnonzero(self._active):
+            s = int(s)
+            req = self._slot_req[s]
+            views.append(SlotView(
+                slot=s, rid=req.rid, admit_seq=int(self._slot_seq[s]),
+                pages_held=len(req.pages) if req.pages else 0,
+                next_pos=int(self._slot_pos[s]),
+                emitted=len(req.out_tokens), budget=req.max_new))
+        return views
+
+    def _evict_slot(self, s: int):
+        """Preempt a live slot (mechanism; *which* slot is the policy's
+        call): force the dispatch chain, bring its generated tokens to
+        host, free the slot — and its pages, the unblock a page-starved
+        peer is waiting on — then re-enter the request at the head of
+        admission via a restore prefill that replays prompt + generated
+        (recompute-on-restore).  The caller refreshes the device
+        active mask / block table after its batch of evictions."""
+        req = self._slot_req[s]
+        # same finish-before-free rule as _tick: the sync proves every
+        # dispatched computation that reads this slot's pages (or the
+        # current block-table mirror) has executed
+        jax.block_until_ready(self._tokens)
+        self._materialise_tokens(req)
+        self.kv.flush(synced=True)
+        req.build_restore(self._restore_prefill)
+        self._release_slot(s)           # slot + pages free right now
+        self.stats_evictions += 1
+        with self._lock:
+            self._pending_prefills += 1
+        self.rt.submit(self._prefill_round, [req],
+                       name=f"serve.restore:{req.rid}"
+                            f"@{len(req.out_tokens)}")
+
+    def _page_faults(self):
+        """On-demand growth: extend a live slot's block table as its next
+        write position crosses a page boundary (one page per slot per
+        tick at most).  Pool exhaustion here is a *block* surfaced to the
+        policy, which must unblock it by naming a victim to evict — the
+        freed pages re-admit the faulting slot (paper: every monitored
+        block pairs with the unblock that releases it).  Under worst-case
+        reservation the fault condition never fires, so this is one
+        comparison per live slot per tick."""
+        grown = evicted = False
+        ps = self.page_size
+        # oldest-first: the default victim rule spares the oldest slot,
+        # so walking in admission order lets the head of the line grow
+        # before younger slots consume the pages it needs
+        order = sorted(np.flatnonzero(self._active),
+                       key=lambda x: self._slot_seq[x])
+        for s in order:
+            s = int(s)
+            if not self._active[s]:     # evicted as a victim this pass
+                continue
+            req = self._slot_req[s]
+            while self._active[s] and \
+                    len(req.pages) * ps <= self._slot_pos[s]:
+                got = self.pager.alloc(1)
+                if got is not None:
+                    self.kv.grow_slot_pages(s, got, base=len(req.pages))
+                    req.pages.extend(got)
+                    self.stats_pages_grown += 1
+                    grown = True
+                    continue
+                victim = self.policy.select_victim(
+                    self, self._slot_views(), needy=s)
+                if victim is None or not self._active[int(victim)]:
+                    raise RuntimeError(
+                        f"policy {self.policy.name!r} returned no live "
+                        f"victim for page-starved slot {s} — eviction is "
+                        "the only unblock for an on-demand fault")
+                self._evict_slot(int(victim))
+                evicted = True
+            if not self._active.any():
+                break
+        if grown or evicted:
+            self.kv.sync_table()
+        if evicted:
+            self._rebind_active()
 
     def _release_slot(self, s: int):
         """Free a slot and, when paged, its pages — immediately, so the
@@ -761,6 +1011,20 @@ class ServeEngine:
 
     def _tick(self):
         kv = self.kv
+        # pre-dispatch policy window: unforced preemption, then on-demand
+        # page faults (both may evict — the tick below only runs over
+        # whatever is still live)
+        if self._policy_may_evict:
+            v = self.policy.maybe_evict(self, self._slot_views())
+            if v is not None:
+                self._evict_slot(int(v))
+                self._rebind_active()
+                if self.paged:
+                    kv.sync_table()
+        if self.paged:
+            self._page_faults()
+        if not self._active.any():
+            return                      # everything evicted: no tick
         if self.paged:
             new_tokens, new_cache = self.decode(
                 self._params, kv.cache, self._tokens, self._active_dev,
@@ -770,6 +1034,7 @@ class ServeEngine:
                 self._params, kv.cache, self._tokens, self._active_dev)
         kv.commit(new_cache, donated=self.donate)
         self._rebind_tokens(new_tokens)
+        self._slot_pos[self._active] += 1   # each live slot wrote one pos
         if self.sync_ticks:
             jax.block_until_ready(self._tokens)
         now = time.monotonic()
@@ -869,6 +1134,11 @@ class ServeEngine:
             "prefill_chunks": self.stats_prefill_chunks,
             "prefill_chunk_tasks": self.stats_prefill_chunk_tasks,
             "stopped_early": self.stats_stopped_early,
+            "admission_blocks": self.stats_admission_blocks,
+            "evictions": self.stats_evictions,
+            "restores": self.stats_restores,
+            "pages_grown": self.stats_pages_grown,
+            "policy": self.policy.name,
             "donate": self.donate,
             "p50_latency_s": percentile(lats, 0.50),
             "p99_latency_s": percentile(lats, 0.99),

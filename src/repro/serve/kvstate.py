@@ -178,6 +178,22 @@ class KVState:
         self.sync_table()
         return jnp.array(self._table[slot])
 
+    def grow_slot_pages(self, slot: int, ids, *, base: int) -> None:
+        """On-demand growth: bind physical pages ``ids`` at the slot's
+        logical pages ``[base, base + len(ids))`` — the table extension a
+        live slot needs when its ``pos`` crosses a page boundary
+        mid-decode (policy: ``repro.serve.policy.OnDemandPolicy``).
+        Host-side only; unlike :meth:`bind_slot_pages` (admission needs
+        the device row immediately) the caller batches one
+        :meth:`sync_table` per tick over every slot grown that tick."""
+        assert self.paged
+        assert 0 <= base and base + len(ids) <= self.pages_per_slot, (
+            f"slot {slot}: grow [{base}, {base + len(ids)}) exceeds "
+            f"{self.pages_per_slot} logical pages")
+        assert (self._table[slot, base:base + len(ids)]
+                == GARBAGE_PAGE).all(), "growing over live table entries"
+        self._table[slot, base:base + len(ids)] = ids
+
     def release_slot_pages(self, slot: int) -> None:
         """Re-point a finished slot's table rows at the garbage page so
         the dead slot's frozen-pos cache writes land nowhere.  Host-side

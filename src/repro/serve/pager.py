@@ -4,12 +4,16 @@ The serve engine's linear attention cache leaves are pools of
 ``num_pages`` physical pages of ``page_size`` token slots (see
 ``repro.steps.init_paged_slot_cache``).  This module owns the *host-side*
 accounting: which physical pages are free, and which belong to which
-request.  Allocation is worst-case at admission (a request reserves every
-page it could ever touch: ``prompt + max_new - 1`` token slots), which is
-what makes the scheme deadlock-free — a request that is admitted can
-always run to completion, so admission can simply *block* (the engine
-keeps the insert queued) until enough pages free up, and a freed page is
-immediately reusable by any other slot.
+request.  *How many* pages a request reserves is a policy decision
+(``repro.serve.policy``): the default worst-case policy reserves every
+page a request could ever touch (``prompt + max_new - 1`` token slots) at
+admission — a request that is admitted can then always run to completion,
+so admission simply *blocks* until enough pages free up, deadlock-free.
+The on-demand policy reserves only the prefill extent and grows one page
+at a time mid-decode (``alloc(1)``); exhaustion there is resolved by
+eviction, not by waiting.  Either way the pager stays pure mechanism: an
+all-or-nothing free list, no partial grants, a freed page immediately
+reusable by any slot.
 
 Page 0 is the reserved **garbage page**: it is never handed out.  Dead
 slots' block tables and unreserved logical pages point at it, so their
@@ -69,9 +73,11 @@ class PagePool:
         return max(0, -(-n_tokens // self.page_size))
 
     def reserve(self, n_tokens: int) -> list[int] | None:
-        """Worst-case admission reservation: every page ``n_tokens``
-        token slots could ever touch, all-or-nothing (the deadlock-free
-        admission rule in one call — the engine's only alloc path)."""
+        """Admission reservation: the pages covering ``n_tokens`` token
+        slots, all-or-nothing.  The policy chooses ``n_tokens`` — the
+        request's worst case (deadlock-free blocking admission) or just
+        its prefill extent (on-demand paging, grown later via
+        ``alloc(1)``)."""
         return self.alloc(self.pages_for(n_tokens))
 
     def alloc(self, n_pages: int) -> list[int] | None:

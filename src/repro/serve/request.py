@@ -12,6 +12,8 @@ import collections
 import threading
 import time
 
+import numpy as np
+
 from ..core import io
 
 
@@ -30,11 +32,27 @@ class Request:
     ``out_tokens``, so the output is always a prefix of the one-shot
     greedy row; the engine frees the slot (and its KV pages) the same
     tick.  Not supported for audio-codebook frontends (a step emits a
-    codebook vector, not one id)."""
+    codebook vector, not one id).
+
+    Preemption (policy-driven): an evicted request keeps ``out_tokens``
+    and re-enters admission with ``resume`` set (recompute-on-restore).
+    Two restore shapes, chosen by the engine per model config:
+
+    * **prefill replay** (extent-invariant configs, same gating as
+      chunked prefill): one prefill over ``prefill_tokens`` — the
+      original prompt plus every emitted token except the last, whose
+      cache entry the never-evicted run would not have written yet
+      either — whose argmax re-derives that last token bit-exactly;
+    * **decode replay** (MoE capacity / SSD chunking / SWA rings are
+      sequence-extent-bound, so a longer prefill is *not* bit-equal):
+      prefill over the original prompt only, then the recorded tokens
+      are re-fed one tick at a time through the serve step — the same
+      computation the first pass ran, so bit-exact by construction."""
 
     __slots__ = ("rid", "tokens", "patches", "max_new", "out_tokens",
                  "t_submit", "t_first", "t_done", "done", "slot", "error",
-                 "eos_id", "stop", "stopped", "pages", "total_len")
+                 "eos_id", "stop", "stopped", "pages", "total_len",
+                 "evictions", "resume", "restore_tokens")
 
     def __init__(self, rid, tokens, patches=None, max_new_tokens: int = 16,
                  eos_id: int | None = None, stop=None):
@@ -57,11 +75,39 @@ class Request:
         self.pages: list | None = None   # physical KV pages while live
         self.total_len: int = 0          # prompt (+ patches) length
         self.error: BaseException | None = None
+        self.evictions: int = 0          # times preempted (policy evict)
+        self.resume = False              # next prefill is a restore replay
+        self.restore_tokens = None       # prompt + generated[:-1], host
 
     @property
     def needs_host_tokens(self) -> bool:
         """Early stop needs the emitted ids on the host every tick."""
         return self.eos_id is not None or bool(self.stop)
+
+    @property
+    def prefill_tokens(self):
+        """What the next prefill runs over: the submitted prompt, or —
+        for a prefill-replay restore — prompt + generated-so-far
+        (rebuilt by the engine at each eviction)."""
+        if self.resume and self.restore_tokens is not None:
+            return self.restore_tokens
+        return self.tokens
+
+    def build_restore(self, prefill_replay: bool) -> None:
+        """Snapshot restore state at eviction time.  ``prefill_replay``:
+        build the prompt + generated[:-1] restore prompt (all host
+        values by now — the engine materialises before evicting);
+        otherwise the original prompt is re-prefilled and the engine
+        decode-replays ``out_tokens`` afterwards."""
+        if prefill_replay:
+            base = np.asarray(self.tokens)
+            gen = self.out_tokens[:-1]
+            self.restore_tokens = base if not gen else np.concatenate(
+                [base, np.asarray(gen)]).astype(base.dtype)
+        else:
+            self.restore_tokens = None
+        self.resume = True
+        self.evictions += 1
 
     # ---- latency accessors (seconds; None until the request completes)
     @property

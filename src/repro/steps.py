@@ -224,7 +224,12 @@ def make_batched_insert_step(cfg, mesh=None, *, cache_len: int,
         (cache, rows_cache, row, slot, table_row) -> cache
         ``table_row``: (pages_per_slot,) physical page ids for the slot;
         unreserved logical pages point at garbage page 0 (their scatters
-        collide there and are never read valid).
+        collide there and are never read valid).  Under on-demand paging
+        the garbage tail is later re-pointed at real pages as the slot's
+        ``pos`` grows past a boundary (``KVState.grow_slot_pages``) —
+        sound precisely because the tail positions were never written
+        anywhere else: the decode scatter fills each page at the moment
+        its position range first becomes live.
 
     ``rows_cache`` is a dense (B, cache_len) prefill/chunk cache; ``row``
     and ``slot`` may be traced scalars, so one jit covers every
@@ -281,6 +286,10 @@ def make_decode_step(cfg, mesh=None, *, cache_len: int | None = None,
     paged pools and the extra ``table`` argument carries the
     (slots, pages_per_slot) block table; dead slots' tables point at
     garbage page 0, so their (frozen-``pos``) cache writes land there.
+    The table is a per-tick *argument*, not captured state, which is
+    what lets the engine grow a live slot's row between ticks (on-demand
+    paging) or re-point an evicted slot's row at garbage without
+    recompiling — the jit sees the same shape either way.
 
     Donation: safe to jit with ``donate_argnums=(1,)`` — the forward
     pass preserves every cache leaf's shape/dtype (trace-time checked),

@@ -203,6 +203,12 @@ def test_pool_exhaustion_serialises_but_never_corrupts(built):
     assert stats["max_live_slots"] == 1
     assert pager.alloc_failures > 0
     assert pager.used_pages == 0
+    # the policy-mechanism counters: each distinct blocked head counts
+    # once, and the default worst-case policy never faults or preempts
+    assert stats["admission_blocks"] > 0
+    assert stats["policy"] == "reserve"
+    assert stats["evictions"] == stats["restores"] \
+        == stats["pages_grown"] == 0
 
 
 @pytest.mark.slow

@@ -100,6 +100,25 @@ def test_partial_reservation_leaves_garbage_tail():
     assert list(row[:2]) == ids and row[2] == GARBAGE_PAGE
 
 
+def test_grow_slot_pages_extends_the_garbage_tail():
+    """On-demand growth: new physical pages land exactly on the garbage
+    tail, one sync_table batches the mirror refresh, and growing over a
+    live entry is loud."""
+    kv = _kv()
+    ids = kv.pager.reserve(PS + 1)               # 2 of 3 logical pages
+    kv.bind_slot_pages(0, ids)
+    more = kv.pager.alloc(1)
+    kv.grow_slot_pages(0, more, base=len(ids))
+    assert (np.asarray(kv.table_dev)[0, 2]
+            == GARBAGE_PAGE)                     # mirror not yet synced
+    kv.sync_table()
+    assert list(np.asarray(kv.table_dev)[0]) == ids + more
+    with pytest.raises(AssertionError, match="live table entries"):
+        kv.grow_slot_pages(0, kv.pager.alloc(1), base=0)
+    with pytest.raises(AssertionError, match="logical pages"):
+        kv.grow_slot_pages(0, [5], base=CACHE_LEN // PS)
+
+
 def test_dense_kvstate_has_no_pager_or_table():
     kv = _kv(paged=False)
     assert kv.pager is None and kv.table_dev is None

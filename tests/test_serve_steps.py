@@ -441,6 +441,51 @@ def test_schedule_fuzz_donation_grid_matches_oneshot(arch, layout, donate,
                   check_alias=donate and arch == "qwen2.5-14b")
 
 
+def test_paged_on_demand_growth_matches_oneshot(built):
+    """On-demand paging at the steps level: insert binds only the pages
+    the prompt needs (table tail at garbage page 0), and the tail is
+    re-pointed at freshly-allocated pages just before ``pos`` crosses
+    each boundary — sound because the decode scatter fills a page the
+    moment its position range first goes live, so the greedy stream must
+    equal the one-shot row exactly."""
+    b = _build("qwen2.5-14b", built)
+    ref = _oneshot_reference(b)
+    cache_len = b["cache_len"]
+    pps = cache_len // PAGE_SIZE
+    pager = PagePool(pps + 2, PAGE_SIZE)
+    cache = init_paged_slot_cache(b["cfg"], SLOTS, cache_len,
+                                  jnp.dtype(b["cfg"].dtype), PAGE_SIZE,
+                                  pps + 2)
+    table = np.zeros((SLOTS, pps), np.int32)
+    rc, t0 = _row_prefill(b, 0)
+    held = pager.reserve(PLEN)              # prompt pages only
+    assert len(held) < pps, "geometry must leave a garbage tail to grow"
+    table[0, :len(held)] = held
+    cache = b["insert_paged"](cache, rc, jnp.int32(0), jnp.int32(0),
+                              jnp.array(table[0]))
+    toks = jnp.zeros((SLOTS, 1), jnp.int32).at[0].set(t0[0])
+    active = jnp.asarray([True, False, False])
+    outs, pos, pins = [np.asarray(t0)], PLEN, []
+    for _ in range(GEN - 1):
+        while len(held) * PAGE_SIZE <= pos:     # grow before the tick
+            got = pager.alloc(1)
+            assert got is not None
+            table[0, len(held)] = got[0]
+            held += got
+        td = jnp.array(table)
+        pins.append((cache, toks, td))          # see _run_schedule
+        toks, cache = b["decode_paged"](b["params"], cache, toks, active,
+                                        td)
+        outs.append(np.asarray(toks)[0:1])
+        pos += 1
+    pins.clear()                                # outs forced the chain
+    assert len(held) > pager.pages_for(PLEN)    # growth actually fired
+    got = np.concatenate(outs, axis=1)[0]
+    assert np.array_equal(got, ref[0])
+    pager.free(held)
+    assert pager.used_pages == 0
+
+
 def test_paged_admission_blocks_under_tight_pool(built):
     """The tight fuzz pool actually exercises exhaustion: across seeds at
     least one alloc must have been refused (and, per the fuzz asserts,

@@ -206,6 +206,49 @@ def test_sharded_queue_steal_below_threshold_takes_one():
     assert [q.pop_local(1) for _ in range(2)] == ts[1:]
 
 
+def test_sharded_queue_topology_steal_order():
+    """Synthetic 2-socket topology (ROADMAP open item): shards 0-1 on
+    socket A, 2-3 on socket B, inter-socket distance 10x intra.  The
+    steal walk must exhaust the local socket before crossing it, with
+    distance ties broken by the old ring order."""
+    topo = [[0, 1, 10, 10],
+            [1, 0, 10, 10],
+            [10, 10, 0, 1],
+            [10, 10, 1, 0]]
+    q = ShardedReadyQueue(4, topology=topo)
+    assert q._steal_order[0] == (1, 2, 3)
+    assert q._steal_order[1] == (0, 2, 3)    # sibling first, then ring
+    assert q._steal_order[2] == (3, 0, 1)
+    assert q._steal_order[3] == (2, 0, 1)
+    # functionally: a dry thief prefers the same-socket victim even when
+    # the ring walk would reach the remote socket first
+    far, near = _mk(), _mk()
+    q.push(far, 2)                           # ring-nearest to shard 1
+    q.push(near, 0)                          # socket sibling of shard 1
+    t, victim = q.steal(1)
+    assert t is near and victim == 0
+    t, victim = q.steal(1)
+    assert t is far and victim == 2
+
+
+def test_sharded_queue_default_walk_is_ring_order():
+    """topology=None (and any all-ties topology) keeps the pre-topology
+    nearest-index walk bit-for-bit."""
+    q = ShardedReadyQueue(4)
+    assert q._steal_order[2] == (3, 0, 1)
+    uniform = ShardedReadyQueue(4, topology=[[1] * 4] * 4)
+    assert uniform._steal_order == q._steal_order
+
+
+def test_runtime_accepts_topology_matrix():
+    from repro.core import UMTRuntime
+
+    with UMTRuntime(n_cores=2, umt=True, trace=False,
+                    topology=[[0, 3], [3, 0]]) as rt:
+        assert rt.submit(lambda: 41 + 1).wait() == 42
+        assert rt.ready._steal_order == ((1,), (0,))
+
+
 def test_runtime_stats_surface_steal_batch_counters():
     from repro.core import UMTRuntime
 
@@ -520,6 +563,31 @@ def test_oversubscription_self_surrender():
         s = rt.stats()
     assert s["spawned"] >= n     # leader actually grew the worker set
     assert s["surrenders"] >= 2  # the herd shed extras at finish points
+
+
+def test_surrender_hysteresis_defers_parking():
+    """With a hysteresis window larger than the run ever reaches, an
+    oversubscribed worker never self-surrenders — the observation is
+    counted as a deferral instead — and the task graph still drains
+    (hysteresis trades churn, never progress).  The default (1) is the
+    paper's eager rule, covered by the surrender test above."""
+    n = 5
+    barrier = threading.Barrier(n)
+
+    def job():
+        io.call(barrier.wait)    # all block together -> leader spawns help
+        time.sleep(0.05)         # herd overlaps -> oversubscription
+        return True
+
+    with UMTRuntime(n_cores=1, umt=True,
+                    surrender_hysteresis=10 ** 6) as rt:
+        hs = [rt.submit(job) for _ in range(n)]
+        assert all(h.wait() for h in hs)
+        rt.wait_all()
+        time.sleep(0.05)
+        s = rt.stats()
+    assert s["surrenders"] == 0
+    assert s["surrender_deferrals"] > 0
 
 
 def test_ready_count_converges_when_quiescent():
