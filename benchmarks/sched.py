@@ -52,6 +52,7 @@ class SchedResult:
     surrenders: int
     n_workers: int
     effective_task_us: float = 0.0   # measured, not requested (see below)
+    spin_claims: int = 0             # tasks claimed mid-spin, park avoided
 
     def row(self) -> str:
         return (f"{self.name},c={self.cores},tasks_s={self.tasks_s:.0f},"
@@ -82,11 +83,12 @@ def measure_sleep_granularity_us(task_us: float, reps: int = 15) -> float:
 
 def _one_run(cores: int, umt: bool, sched: str, n_tasks: int,
              task_us: float, blocking: bool,
-             hysteresis: int = 1) -> SchedResult:
+             hysteresis: int = 1, spin_us: float = 0) -> SchedResult:
     sleep_s = task_us * 1e-6
     lat_ns = []
     with UMTRuntime(n_cores=cores, umt=umt, sched=sched, trace=False,
-                    surrender_hysteresis=hysteresis) as rt:
+                    surrender_hysteresis=hysteresis,
+                    spin_before_park_us=spin_us) as rt:
         if blocking:
             def tiny():
                 io.sleep(sleep_s)       # monitored: full UMT event traffic
@@ -105,7 +107,8 @@ def _one_run(cores: int, umt: bool, sched: str, n_tasks: int,
     lat_ns.sort()
     name = (f"sched_{'umt' if umt else 'base'}_{sched}"
             f"{'_blk' if blocking else ''}"
-            f"{f'_h{hysteresis}' if hysteresis != 1 else ''}")
+            f"{f'_h{hysteresis}' if hysteresis != 1 else ''}"
+            f"{f'_spin{spin_us:g}' if spin_us else ''}")
     return SchedResult(
         name=name, cores=cores, umt=umt, sched=sched, blocking=blocking,
         tasks_s=n_tasks / dt,
@@ -113,14 +116,15 @@ def _one_run(cores: int, umt: bool, sched: str, n_tasks: int,
         submit_p99_us=lat_ns[int(len(lat_ns) * 0.99)] / 1e3,
         steal_rate=s["steals"] / n_tasks,
         wakes=s["wakes"], surrenders=s["surrenders"],
-        n_workers=s["n_workers"])
+        n_workers=s["n_workers"], spin_claims=s["spin_claims"])
 
 
 def bench(cores: int, umt: bool, sched: str, n_tasks: int, task_us: float,
-          reps: int, blocking: bool, hysteresis: int = 1) -> SchedResult:
+          reps: int, blocking: bool, hysteresis: int = 1,
+          spin_us: float = 0) -> SchedResult:
     """Median-throughput result over ``reps`` runs."""
     runs = [_one_run(cores, umt, sched, n_tasks, task_us, blocking,
-                     hysteresis)
+                     hysteresis, spin_us)
             for _ in range(reps)]
     runs.sort(key=lambda r: r.tasks_s)
     return runs[len(runs) // 2]
@@ -173,6 +177,64 @@ def bench_hysteresis_ab(cores: int, n_tasks: int, task_us: float,
           f"churn1={churn1:.2f},churnN={churnN:.2f}", flush=True)
 
 
+def _trickle_run(cores: int, n_tasks: int, task_us: float,
+                 spin_us: float, gap_us: float):
+    """One paced run: monitored tasks submitted one every ``gap_us``
+    (``time.sleep`` pacing — floors at container sleep granularity, so
+    keep the gap well above it) so workers repeatedly go dry just
+    before the next arrival — the regime the idle-spin targets.
+    Returns (tasks_s, stats)."""
+    sleep_s = task_us * 1e-6
+    with UMTRuntime(n_cores=cores, umt=True, sched="sharded", trace=False,
+                    spin_before_park_us=spin_us) as rt:
+        def tiny():
+            io.sleep(sleep_s)
+        t0 = time.perf_counter()
+        for _ in range(n_tasks):
+            rt.submit(tiny)
+            time.sleep(gap_us * 1e-6)
+        rt.wait_all()
+        dt = time.perf_counter() - t0
+        s = rt.stats()
+    return n_tasks / dt, s
+
+
+def bench_spin_ab(cores: int, n_tasks: int, task_us: float,
+                  reps: int, spin_us: float) -> None:
+    """Idle-spin A/B: paper-strict eager park (spin 0: a dry worker
+    parks at once, so every trickled task pays the full park/wake round
+    trip — semaphore block + Leader epoll + eventfd drain) vs a bounded
+    ``spin_us`` poll of the ready queue before parking.  Tasks arrive
+    well inside the spin window — the sub-wake-latency cadence the spin
+    targets; the win shows up as spin claims displacing wakes at
+    comparable throughput, the cost (burnt idle CPU) is bounded by the
+    window.  The window must sit above the interpreter's GIL switch
+    interval (~5 ms) for the poll to observe arrivals at all — same
+    honesty note as the sleep-granularity calibration above."""
+    gap_us = spin_us * 0.4
+    # wall time is n_tasks * gap by construction — cap the trickle so
+    # the A/B stays a few seconds however large the burst benches are
+    n_tasks = min(n_tasks, 600)
+    legs = {}
+    for su in (0, spin_us):
+        runs = sorted(_trickle_run(cores, n_tasks, task_us, su, gap_us)
+                      for _ in range(reps))
+        legs[su] = runs[len(runs) // 2]
+        ts, s = legs[su]
+        print(f"sched_umt_sharded_trickle_spin{su:g},c={cores},"
+              f"tasks_s={ts:.0f},wakes={s['wakes']},"
+              f"surr={s['surrenders']},spin_claims={s['spin_claims']}",
+              flush=True)
+    (ts0, s0), (tsN, sN) = legs[0], legs[spin_us]
+    sp = tsN / ts0
+    print(f"  -> spin A/B c={cores}: spin{spin_us:g}us/spin0 tasks_s = "
+          f"{sp:.2f}x, wakes {s0['wakes']} -> {sN['wakes']}, "
+          f"spin claims {sN['spin_claims']}", flush=True)
+    print(f"SPIN,c={cores},spin_us={spin_us:g},speedup={sp:.2f},"
+          f"wakes0={s0['wakes']},wakesN={sN['wakes']},"
+          f"claims={sN['spin_claims']}", flush=True)
+
+
 def main(argv=None) -> list[SchedResult]:
     ap = argparse.ArgumentParser()
     ap.add_argument("--cores", default="1,2,4,8")
@@ -186,6 +248,11 @@ def main(argv=None) -> list[SchedResult]:
     ap.add_argument("--hysteresis", type=int, default=4,
                     help="blocking mode: A/B the surrender-hysteresis "
                          "leg at this N vs the paper-strict 1")
+    ap.add_argument("--spin-us", type=float, default=5000.0,
+                    help="blocking mode: A/B a bounded idle-spin of "
+                         "this many us before parking vs the "
+                         "paper-strict eager park (0 disables; keep "
+                         "above the ~5 ms GIL switch interval)")
     ap.add_argument("--fast", action="store_true")
     args = ap.parse_args(argv)
     try:
@@ -215,6 +282,9 @@ def main(argv=None) -> list[SchedResult]:
         if blocking and args.hysteresis > 1:
             bench_hysteresis_ab(max(core_list), n_tasks, args.task_us,
                                 reps, args.hysteresis)
+        if blocking and args.spin_us > 0:
+            bench_spin_ab(max(core_list), n_tasks, args.task_us,
+                          reps, args.spin_us)
     for (cores, umt, blocking), sp in sorted(speedups.items()):
         tag = ("umt" if umt else "base") + ("_blk" if blocking else "")
         print(f"SPEEDUP,{tag},c={cores},{sp:.2f}")

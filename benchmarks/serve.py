@@ -41,7 +41,13 @@ Beyond the load sweep, three targeted phases (ISSUE 3/4 acceptance):
     eviction vs worst-case reservation at equal KV memory: strictly more
     live slots (hard-asserted), then an eviction storm on a budget two
     requests cannot share (evictions > 0 hard-asserted, churn tail
-    latency vs admission serialisation, tokens bit-identical throughout).
+    latency vs admission serialisation, tokens bit-identical throughout);
+  * fused paged-attention kernel A/B (ISSUE 6) — decode via the
+    in-kernel block-table walk vs the dense-gather materialisation:
+    tokens/s and tick p50/p99 per leg on shared interleaved repeats,
+    greedy tokens hard-asserted identical (off-TPU the kernel leg runs
+    the interpret-mode emulation, so the row is integration evidence;
+    the gather-elimination proof is benchmarks.kernels' HLO assertion).
 
   python -m benchmarks.serve [--loads 32,256] [--requests 32] [--slots 4]
                              [--prompt-len 16] [--gen 16] [--cores 4]
@@ -84,6 +90,7 @@ class ServeResult:
     pages_capacity: int | None = None
     max_live: int = 0
     prefill_calls: int = 0
+    p50_tick_ms: float | None = None
     p99_tick_ms: float | None = None
     evictions: int = 0
     restores: int = 0
@@ -153,6 +160,8 @@ def run_engine(cfg, params, steps, prompts, gaps, *, gens, slots, cache_len,
         pages_peak=st.get("pages_used_peak"),
         pages_capacity=st.get("pages_capacity"),
         max_live=st["max_live_slots"], prefill_calls=st["prefill_calls"],
+        p50_tick_ms=(st["p50_tick_s"] * 1e3
+                     if st["p50_tick_s"] is not None else None),
         p99_tick_ms=(st["p99_tick_s"] * 1e3
                      if st["p99_tick_s"] is not None else None),
         evictions=st["evictions"], restores=st["restores"],
@@ -504,6 +513,84 @@ def bench_donation_ab(cfg, params, prompts, patches, gens, *, loads, slots,
     return out
 
 
+def bench_paged_kernel_ab(cfg, params, prompts, patches, gens, *, loads,
+                          slots, cache_len, page_size, cores, seed,
+                          repeats=3, steps_off=None) -> list[ServeResult]:
+    """ISSUE 6 acceptance phase: the fused paged-attention decode kernel
+    A/B'd against the dense-gather decode on the same arrival trace.
+
+    Kernel-on and kernel-off legs share interleaved repeats at each
+    load (``sync_ticks=True`` so tick quantiles measure compute
+    cadence); per-leg tokens/s and tick p50/p99 medians are reported and
+    greedy tokens are hard-asserted identical — the kernel is a memory-
+    layout change, never a numbers change.  Off-TPU the kernel leg runs
+    the interpret-mode emulation (same kernel, Python-level grid walk),
+    so its wall-clock is a correctness harness, not the Mosaic timing:
+    the gather-elimination evidence is benchmarks.kernels' HLO
+    assertion; this phase pins the end-to-end engine integration."""
+    legs = {}
+    for kernel in (False, True):
+        st = steps_off if not kernel else None
+        if st is None:
+            st = make_jit_steps(cfg, cache_len=cache_len,
+                                page_size=page_size, paged_kernel=kernel)
+            warm_engine_shapes(cfg, params, st, prompts, patches,
+                               slots=slots, cache_len=cache_len,
+                               cores=cores)
+        legs[kernel] = st
+
+    def _med(vals):
+        xs = sorted(v for v in vals if v is not None)
+        return xs[len(xs) // 2] if xs else float("nan")
+
+    out = []
+    for load in loads:
+        gaps = np.random.default_rng(seed).exponential(
+            1.0 / load, len(prompts))
+        runs = {k: [] for k in legs}
+        for _ in range(repeats):
+            for kernel, st in legs.items():      # interleaved A/B
+                res, toks = run_engine(
+                    cfg, params, st, prompts, gaps, gens=gens,
+                    slots=slots, cache_len=cache_len, umt=True,
+                    cores=cores, patches=patches,
+                    name=f"serve_paged_kernel_{'on' if kernel else 'off'}",
+                    page_size=page_size, sync_ticks=True)
+                res.load = load
+                runs[kernel].append((res, toks))
+        ref = runs[False][-1][1]
+        for kernel, rs in runs.items():
+            for _, toks in rs:
+                for i, (a, b) in enumerate(zip(ref, toks)):
+                    assert np.array_equal(a, b), (
+                        f"paged-kernel A/B token mismatch: kernel="
+                        f"{kernel} @ load {load}, request {i}")
+        med = {}
+        for kernel in (False, True):
+            rs = [r for r, _ in runs[kernel]]
+            r = rs[-1]
+            r.tokens_s = _med(x.tokens_s for x in rs)
+            r.wall_s = _med(x.wall_s for x in rs)
+            r.occupancy = _med(x.occupancy for x in rs)
+            r.p50_s = _med(x.p50_s for x in rs)
+            r.p99_s = _med(x.p99_s for x in rs)
+            r.p50_tick_ms = _med(x.p50_tick_ms for x in rs)
+            r.p99_tick_ms = _med(x.p99_tick_ms for x in rs)
+            med[kernel] = r
+            out.append(r)
+            print(r.row(), flush=True)
+        ratio = med[True].tokens_s / med[False].tokens_s
+        print(f"  -> paged-kernel A/B load={load:g} (median of "
+              f"{repeats}): on/off tokens_s = {ratio:.2f}x "
+              "(interpret emulation off-TPU), tick p50 "
+              f"{med[True].p50_tick_ms:.1f} vs "
+              f"{med[False].p50_tick_ms:.1f} ms, p99 "
+              f"{med[True].p99_tick_ms:.1f} vs "
+              f"{med[False].p99_tick_ms:.1f} ms — tokens bit-identical "
+              "(PASS)", flush=True)
+    return out
+
+
 def bench_policy_phases(cfg, params, steps, prefill, serve_step, *, slots,
                         cache_len, page_size, prompt_len, gen, cores,
                         n_req, seed) -> list[ServeResult]:
@@ -730,6 +817,14 @@ def main(argv=None) -> list[ServeResult]:
             cores=args.cores, seed=args.seed,
             repeats=1 if args.smoke else 3,
             steps_on={"paged": steps, "dense": steps_dense}))
+
+        # phase: fused paged-attention kernel A/B — in-kernel block-table
+        # walk vs dense-gather decode, tokens hard-asserted identical
+        results.extend(bench_paged_kernel_ab(
+            cfg, params, prompts, patches, gens, loads=loads,
+            slots=args.slots, cache_len=cache_len, page_size=page_size,
+            cores=args.cores, seed=args.seed,
+            repeats=1 if args.smoke else 3, steps_off=steps))
 
         # phase: strictly more concurrent slots at equal KV memory
         results.append(bench_equal_memory_slots(

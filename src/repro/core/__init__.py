@@ -10,10 +10,12 @@ from .monitor import current_worker, io, umt_blocking, umt_thread_ctrl
 from .runtime import Leader, UMTRuntime, Worker
 from .task import (AtomicCounter, DependencyTracker, ReadyQueue,
                    ShardedReadyQueue, Task)
+from .topology import detect_topology
 from .tracing import Tracer
 
 __all__ = [
     "EventChannel", "umt_enable", "current_worker", "io", "umt_blocking",
     "umt_thread_ctrl", "Leader", "UMTRuntime", "Worker", "AtomicCounter",
     "DependencyTracker", "ReadyQueue", "ShardedReadyQueue", "Task", "Tracer",
+    "detect_topology",
 ]

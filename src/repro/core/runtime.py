@@ -52,6 +52,7 @@ from .eventchannel import umt_enable
 from .monitor import current_worker, io, umt_thread_ctrl
 from .task import (AtomicCounter, DependencyTracker, ReadyQueue,
                    ShardedReadyQueue, Task)
+from .topology import detect_topology
 from .tracing import Tracer
 
 
@@ -120,6 +121,8 @@ class Worker(threading.Thread):
         rt.tracer.ev("spawn", self.wid, self.core)
         while rt.running:
             task = rt.next_task(self)
+            if task is None and rt.spin_before_park_us:
+                task = rt.spin_for_task(self)
             if task is None:
                 if not rt.park(self):
                     break
@@ -242,10 +245,16 @@ class UMTRuntime:
                  max_workers_per_core: int = 8, scan_interval: float = 0.001,
                  trace: bool = True, notify: str = "all",
                  sched: str = "sharded", scan_min_gap: float | None = None,
-                 topology=None, surrender_hysteresis: int = 1):
+                 topology="auto", surrender_hysteresis: int = 1,
+                 spin_before_park_us: float = 0):
         assert notify in ("all", "idle_only")
         assert sched in ("sharded", "global")
         assert surrender_hysteresis >= 1
+        assert spin_before_park_us >= 0
+        # bounded idle-spin before parking (0 = paper-strict eager park):
+        # a dry worker polls its queue for this many microseconds before
+        # paying the park/wake round-trip — see spin_for_task
+        self.spin_before_park_us = spin_before_park_us
         self.n_cores = n_cores or os.cpu_count() or 1
         self.umt = umt
         self.notify = notify
@@ -263,6 +272,14 @@ class UMTRuntime:
         self.max_workers = max_workers_per_core * self.n_cores
         self.running = True
         self.tracer = Tracer(trace)
+        # "auto" (default) derives the steal-distance matrix from the
+        # host's sysfs cache hierarchy; flat/undetectable hosts resolve
+        # to None — the ring walk, bit-for-bit the pre-topology
+        # behaviour.  Pass None to force flat, or an explicit matrix.
+        if isinstance(topology, str):
+            assert topology == "auto"
+            topology = detect_topology(self.n_cores)
+        self.topology = topology
         self.ready = (ShardedReadyQueue(self.n_cores, topology=topology)
                       if self.sharded else ReadyQueue())
         self.deps = DependencyTracker()
@@ -280,7 +297,7 @@ class UMTRuntime:
         self.stats_extra = {"wakes": 0, "surrenders": 0,
                             "surrender_deferrals": 0, "spawned": 0,
                             "leader_wakeups": 0, "leader_drains": 0,
-                            "leader_scans": 0}
+                            "leader_scans": 0, "spin_claims": 0}
 
         for c in range(self.n_cores):
             self._spawn(c)
@@ -590,6 +607,29 @@ class UMTRuntime:
         return True
 
     # ------------------------------------------------------------ parking
+    def spin_for_task(self, w: Worker):
+        """Bounded idle-spin before parking: a dry worker re-polls the
+        ready queue for ``spin_before_park_us`` before paying the
+        park/wake round-trip (semaphore block + Leader epoll + eventfd
+        drain).  Wins when tasks arrive at sub-wake-latency cadence
+        (fine-grained fan-out), burns the core for nothing when the
+        queue stays dry — hence the default of 0, which is the paper's
+        eager-park rule verbatim.  The spinning worker stays *runnable*
+        (no block event), so the kernel-side counters see the core as
+        busy the whole window.  Returns a claimed task, or None when the
+        window expires (measured A/B in benchmarks/sched.py)."""
+        deadline = time.perf_counter() + self.spin_before_park_us * 1e-6
+        while self.running and time.perf_counter() < deadline:
+            task = self.next_task(w)
+            if task is not None:
+                self.stats_extra["spin_claims"] += 1
+                return task
+            # a hardware runtime would pause-spin; here the poll must
+            # yield the GIL or the spinner starves producers for a whole
+            # switch interval (~5 ms) and inverts the win
+            time.sleep(0)
+        return None
+
     def parked(self, w: Worker) -> bool:
         with self._pool_lock:
             return w in self._pool

@@ -1,16 +1,26 @@
 """Pallas TPU kernels for the compute hot-spots (validated in interpret
 mode on CPU; Mosaic-lowered on real TPUs):
 
-  * flash_attention — tiled online-softmax attention (causal/SWA/GQA)
-  * ssd_chunk       — Mamba2 SSD chunk scan with VMEM-carried state
-  * rmsnorm         — fused normalisation
+  * flash_attention  — tiled online-softmax attention (causal/SWA/GQA)
+  * paged_attention  — fused paged decode attention: walks the per-slot
+                       block table in-kernel (scalar-prefetch BlockSpec
+                       index maps) and reads K/V pages in place, so the
+                       dense ``page_gather`` copy never materialises
+  * ssd_chunk        — Mamba2 SSD chunk scan with VMEM-carried state
+  * rmsnorm          — fused normalisation
 
 Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper) and ref.py (pure-jnp oracle used by the allclose sweeps).
 """
 from .flash_attention import flash_attention, flash_attention_ref
+from .paged_attention import (paged_decode_attention,
+                              paged_decode_attention_ref,
+                              paged_mla_decode_attention,
+                              paged_mla_decode_attention_ref)
 from .rmsnorm import rms_norm, rms_norm_ref
 from .ssd_chunk import ssd_scan, ssd_scan_ref
 
-__all__ = ["flash_attention", "flash_attention_ref", "rms_norm",
-           "rms_norm_ref", "ssd_scan", "ssd_scan_ref"]
+__all__ = ["flash_attention", "flash_attention_ref",
+           "paged_decode_attention", "paged_decode_attention_ref",
+           "paged_mla_decode_attention", "paged_mla_decode_attention_ref",
+           "rms_norm", "rms_norm_ref", "ssd_scan", "ssd_scan_ref"]

@@ -1,0 +1,57 @@
+"""jit'd public wrappers: engine-layout arguments in (single decode
+token per slot, pools as stored in the paged KV cache), GQA head-group
+reshape handled here, auto-interpret on non-TPU backends (validation
+mode — the CPU container runs the same kernel end-to-end)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import (paged_decode_attention_pools,
+                     paged_mla_decode_attention_pools)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("page_size", "window",
+                                             "scale", "interpret"))
+def paged_decode_attention(q, k_pool, v_pool, table, pos, *, page_size,
+                           window=None, scale=None, interpret=None):
+    """q: (B, 1, H, Dh) — one decode token per slot; k/v pools:
+    (P, page_size, Hkv, Dh) physical pages; table: (B, pages_per_slot)
+    int32 block table (page 0 = reserved garbage page); pos: (B,)
+    per-slot positions.  Returns (B, 1, H, Dh)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, s1, h, dh = q.shape
+    assert s1 == 1, "decode kernel: one query token per slot"
+    hkv = k_pool.shape[2]
+    group = h // hkv
+    # kv-head-major head split: flat head h -> (h // group, h % group),
+    # matching the _expand_kv group-broadcast order
+    qg = q[:, 0].reshape(b, hkv, group, dh)
+    og = paged_decode_attention_pools(
+        qg, k_pool, v_pool, table.astype(jnp.int32), pos.astype(jnp.int32),
+        page_size=page_size, window=window, scale=scale,
+        interpret=interpret)
+    return og.reshape(b, 1, h, dh)
+
+
+@functools.partial(jax.jit, static_argnames=("page_size", "scale",
+                                             "interpret"))
+def paged_mla_decode_attention(q_lat, q_rope, ckv_pool, krope_pool, table,
+                               pos, *, page_size, scale, interpret=None):
+    """Absorbed MLA decode over paged latent pools.  q_lat: (B, 1, H,
+    Rkv) (q_nope already absorbed through wk_b); q_rope: (B, 1, H, Dr);
+    pools: (P, page_size, Rkv) / (P, page_size, Dr); table: (B, pps)
+    int32; pos: (B,).  Returns the attended latent (B, 1, H, Rkv)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return paged_mla_decode_attention_pools(
+        q_lat, q_rope, ckv_pool, krope_pool, table.astype(jnp.int32),
+        pos.astype(jnp.int32), page_size=page_size, scale=scale,
+        interpret=interpret)

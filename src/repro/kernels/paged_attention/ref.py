@@ -1,0 +1,56 @@
+"""Pure-jnp oracle: gather the pages dense (the exact materialisation
+the kernel eliminates) and attend with a masked f32 softmax — the same
+math ``page_gather`` + ``decode_attention`` compute in the model layer,
+kept self-contained here so the sweeps need no model imports."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _gather(pool, table, page_size):
+    b, pps = table.shape
+    return pool[table].reshape((b, pps * page_size) + pool.shape[2:])
+
+
+def paged_decode_attention_ref(q, k_pool, v_pool, table, pos, *,
+                               page_size, window=None, scale=None):
+    """Same signature/layout as ops.paged_decode_attention."""
+    b, _, h, dh = q.shape
+    hkv = k_pool.shape[2]
+    kd = _gather(k_pool, table, page_size)      # (B, T, Hkv, Dh)
+    vd = _gather(v_pool, table, page_size)
+    rep = h // hkv
+    kd = jnp.repeat(kd, rep, axis=2)
+    vd = jnp.repeat(vd, rep, axis=2)
+    scale = (dh ** -0.5) if scale is None else scale
+    kj = jnp.arange(kd.shape[1])[None, :]
+    ok = kj <= pos[:, None]
+    if window is not None:
+        ok &= kj > pos[:, None] - window
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        kd.astype(jnp.float32)) * scale
+    scores = jnp.where(ok[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vd.astype(jnp.float32))
+    any_valid = jnp.any(ok, axis=1)[:, None, None, None]
+    return jnp.where(any_valid, out, 0.0).astype(q.dtype)
+
+
+def paged_mla_decode_attention_ref(q_lat, q_rope, ckv_pool, krope_pool,
+                                   table, pos, *, page_size, scale):
+    """Same signature/layout as ops.paged_mla_decode_attention."""
+    cd = _gather(ckv_pool, table, page_size)    # (B, T, Rkv)
+    kd = _gather(krope_pool, table, page_size)  # (B, T, Dr)
+    scores = (jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32),
+                         cd.astype(jnp.float32)) +
+              jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32),
+                         kd.astype(jnp.float32))) * scale
+    ok = jnp.arange(cd.shape[1])[None, :] <= pos[:, None]
+    scores = jnp.where(ok[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    lat = jnp.einsum("bhst,btr->bshr", probs, cd.astype(jnp.float32))
+    any_valid = jnp.any(ok, axis=1)[:, None, None, None]
+    return jnp.where(any_valid, lat, 0.0).astype(q_lat.dtype)

@@ -91,6 +91,7 @@ def serve_engine(cfg, params, mesh, args):
                      prefill_chunk=args.chunk if args.chunk > 0
                      else None,
                      donate=not args.no_donate,
+                     paged_kernel=args.paged_kernel,
                      policy=args.policy) as eng:
         reqs = []
         for i in range(args.requests):
@@ -114,6 +115,7 @@ def serve_engine(cfg, params, mesh, args):
         "umt": not args.no_umt,
         "page_size": stats["page_size"],
         "donate": stats["donate"],
+        "paged_kernel": stats["paged_kernel"],
         "policy": stats["policy"],
         "kv_versions": stats["kv_version"],
         "pages_used_peak": stats.get("pages_used_peak"),
@@ -161,6 +163,10 @@ def serve(argv=None):
     ap.add_argument("--chunk", type=int, default=0,
                     help="engine: chunked prefill — prompts longer than "
                          "this prefill as cache-append chunks (0 = off)")
+    ap.add_argument("--paged-kernel", action="store_true",
+                    help="engine: decode attention through the fused "
+                         "paged-attention Pallas kernel (reads KV pages "
+                         "in place; default is the gather+dense leg)")
     ap.add_argument("--no-donate", action="store_true",
                     help="engine: disable buffer donation on the "
                          "decode/insert/chunk cache argument (the "

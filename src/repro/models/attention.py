@@ -17,6 +17,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..kernels import paged_decode_attention, paged_mla_decode_attention
 from ..sharding import shard
 from .layers import apply_rope, page_gather, page_scatter, rms_norm
 
@@ -240,7 +241,10 @@ def gqa_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None,
     (P, page_size, Hkv, Dh): the new token's K/V is scattered through the
     block table and attention runs over a gathered slot-major dense view
     — bit-identical to the unpaged cache, since every valid (masked-in)
-    position gathers the very value the dense cache would hold.
+    position gathers the very value the dense cache would hold.  With
+    ``pages["kernel"]`` the gather is replaced by the fused
+    :func:`repro.kernels.paged_decode_attention` Pallas kernel, which
+    reads the same pages in place (same greedy tokens, no dense copy).
     """
     b, s, _ = x.shape
     h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -272,18 +276,26 @@ def gqa_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None,
             table, ps = pages["table"], pages["page_size"]
             kc = page_scatter(kc, table, ps, pos, k)
             vc = page_scatter(vc, table, ps, pos, v)
-            kd = shard(page_gather(kc, table, ps),
-                       "batch", "seq_shard", None, None)
-            vd = shard(page_gather(vc, table, ps),
-                       "batch", "seq_shard", None, None)
+            if pages.get("kernel"):
+                # fused path: the Pallas kernel walks the block table
+                # in-kernel and reads pages in place — page_gather's
+                # dense slot-major copy never exists
+                pv = pos if jnp.ndim(pos) == 1 else jnp.full((b,), pos)
+                out = paged_decode_attention(q, kc, vc, table, pv,
+                                             page_size=ps, window=w)
+            else:
+                kd = shard(page_gather(kc, table, ps),
+                           "batch", "seq_shard", None, None)
+                vd = shard(page_gather(vc, table, ps),
+                           "batch", "seq_shard", None, None)
+                out = decode_attention(q, kd, vd, pos, window=w)
         else:
             idx = jnp.mod(pos, kc.shape[1]) if w is not None else pos
             kc = _cache_update(kc, k, idx)
             vc = _cache_update(vc, v, idx)
             kc = shard(kc, "batch", "seq_shard", None, None)
             vc = shard(vc, "batch", "seq_shard", None, None)
-            kd, vd = kc, vc
-        out = decode_attention(q, kd, vd, pos, window=w)
+            out = decode_attention(q, kc, vc, pos, window=w)
         new_cache = {"k": kc, "v": vc}
     else:
         q = shard(q, "batch", "seq", "heads", "head_dim")
@@ -398,14 +410,16 @@ def mla_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None,
         k_rope = apply_rope(k_rope[:, :, None, :], rp,
                             cfg.rope_theta)[:, :, 0, :]
         cc, kr = cache["ckv"], cache["krope"]
+        fused = paged_leaf(pages, None) and pages.get("kernel")
         if paged_leaf(pages, None):
             table, ps = pages["table"], pages["page_size"]
             cc = page_scatter(cc, table, ps, pos, ckv)
             kr = page_scatter(kr, table, ps, pos, k_rope)
-            cd = shard(page_gather(cc, table, ps),
-                       "batch", "seq_shard", None)
-            kd = shard(page_gather(kr, table, ps),
-                       "batch", "seq_shard", None)
+            if not fused:
+                cd = shard(page_gather(cc, table, ps),
+                           "batch", "seq_shard", None)
+                kd = shard(page_gather(kr, table, ps),
+                           "batch", "seq_shard", None)
         else:
             cc = _cache_update(cc, ckv, pos)
             kr = _cache_update(kr, k_rope, pos)
@@ -415,15 +429,24 @@ def mla_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None,
         wk_b = p["wk_b"].astype(dt).reshape(rkv, h, dn)
         # absorb q_nope through wk_b:  (B,1,H,rkv)
         q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, wk_b)
-        scores = (jnp.einsum("bshr,btr->bhst", q_lat, cd) +
-                  jnp.einsum("bshr,btr->bhst", q_rope, kd))
-        scores = scores.astype(jnp.float32) * scale
-        valid = jnp.arange(cd.shape[1]) <= rp              # (B,T) | (T,)
-        mb = jnp.where(valid, 0.0, NEG_INF)
-        scores = scores + (mb[:, None, None, :] if per_slot
-                           else mb[None, None, None, :])
-        probs = jax.nn.softmax(scores, axis=-1).astype(dt)
-        lat = jnp.einsum("bhst,btr->bshr", probs, cd)          # (B,1,H,rkv)
+        if fused:
+            # fused paged path: latent pages read in place (the absorbed
+            # form's V is its K, so the kernel returns the attended
+            # latent and wv_b applies outside)
+            pv = pos if per_slot else jnp.full((b,), pos)
+            lat = paged_mla_decode_attention(q_lat, q_rope, cc, kr,
+                                             table, pv, page_size=ps,
+                                             scale=scale)
+        else:
+            scores = (jnp.einsum("bshr,btr->bhst", q_lat, cd) +
+                      jnp.einsum("bshr,btr->bhst", q_rope, kd))
+            scores = scores.astype(jnp.float32) * scale
+            valid = jnp.arange(cd.shape[1]) <= rp          # (B,T) | (T,)
+            mb = jnp.where(valid, 0.0, NEG_INF)
+            scores = scores + (mb[:, None, None, :] if per_slot
+                               else mb[None, None, None, :])
+            probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+            lat = jnp.einsum("bhst,btr->bshr", probs, cd)      # (B,1,H,rkv)
         out = jnp.einsum("bshr,rhv->bshv", lat,
                          p["wv_b"].astype(dt).reshape(rkv, h, dv))
         new_cache = {"ckv": cc, "krope": kr}

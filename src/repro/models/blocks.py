@@ -46,7 +46,9 @@ def block_cache_shapes(cfg, spec, batch, seq):
 
 def block_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None,
                 pages=None, attn_extent=None):
-    """Returns (x, new_cache, aux_loss)."""
+    """Returns (x, new_cache, aux_loss).  ``pages`` is the paged-KV
+    descriptor threaded verbatim to the mixer (see repro.models.lm.forward
+    — its ``"kernel"`` key selects the fused paged-attention decode)."""
     _, _, apply_fn = _mixer(spec)
     out, new_cache = apply_fn(x, p["mixer"], cfg, spec, mode=mode, pos=pos,
                               cache=cache, cache_len=cache_len, pages=pages,

@@ -52,7 +52,12 @@ def page_gather(pool, table, page_size):
     mask must cover).  Returns (B, pages_per_slot * page_size, ...) — the
     same dense layout a per-slot cache row would have, so the attention
     math downstream is untouched (and bit-identical) relative to the
-    unpaged cache."""
+    unpaged cache.
+
+    This materialisation is the copy the fused paged-attention kernel
+    eliminates: with ``pages["kernel"]`` set, decode attention walks the
+    block table inside repro.kernels.paged_attention and never calls
+    this — it stays as the default A/B leg and the oracle."""
     b, pps = table.shape
     gathered = pool[table]                     # (B, pps, page_size, ...)
     return gathered.reshape((b, pps * page_size) + pool.shape[2:])

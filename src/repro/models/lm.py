@@ -145,9 +145,12 @@ def forward(params, cfg, tokens, *, mode="train", pos=0, cache=None,
 
     pages: optional paged-KV descriptor for decode —
     ``{"table": (B, pages_per_slot) int32, "page_size": int,
-    "cache_len": int}``.  Linear attention cache leaves are then paged
-    pools (see repro.models.layers.page_gather); bounded leaves (SWA
-    rings, SSM state) stay dense per-slot rows.
+    "cache_len": int, "kernel": bool}``.  Linear attention cache leaves
+    are then paged pools (see repro.models.layers.page_gather); bounded
+    leaves (SWA rings, SSM state) stay dense per-slot rows.  With
+    ``"kernel"`` set, attention walks the block table inside the fused
+    Pallas decode kernel (repro.kernels.paged_attention) instead of
+    materialising the dense gather — same tokens, no dense K/V view.
 
     attn_extent (prefill_chunk only): static key extent — attention reads
     only the first ``attn_extent`` cache positions (must cover

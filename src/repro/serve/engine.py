@@ -109,8 +109,8 @@ def auto_page_size(cache_len: int, cap: int = 8) -> int:
 
 
 def make_jit_steps(cfg, mesh=None, cache_len: int = 64, *,
-                   page_size: int | None = None, chunk: bool = False,
-                   donate: bool = True):
+                   page_size: int | None = None, chunk: bool | None = None,
+                   donate: bool = True, paged_kernel: bool = False):
     """The engine's jitted steps, built once — pass as ``jit_steps`` to
     several ``ServeEngine`` instances (benchmark A/B legs) so XLA compiles
     each step a single time per process.  Returns a dict carrying the
@@ -123,17 +123,37 @@ def make_jit_steps(cfg, mesh=None, cache_len: int = 64, *,
     aliases every cache leaf in place (alias safety is asserted per leaf
     by the first engine built on the dict), eliminating the per-tick
     full-pool copy.  ``donate=False`` keeps the copying legacy path as
-    the benchmark A/B leg."""
+    the benchmark A/B leg.
+
+    ``chunk=None`` (default) builds the chunked-prefill step whenever the
+    config can chunk bit-exactly (``repro.steps.chunkable``) — jit is
+    lazy, so an unused chunk step costs nothing, and the engine needs it
+    to route eviction restores through bounded shapes instead of paying
+    one XLA compile per distinct prompt+generated length.  ``False``
+    omits it from the dict (an engine on a chunkable config still builds
+    its own); ``True`` requires a chunkable config.
+
+    ``paged_kernel=True`` builds the decode step on the fused
+    paged-attention Pallas kernel (pages read in place, no dense
+    ``page_gather`` per tick); default False keeps the dense-gather leg
+    — the A/B baseline and bit-exactness oracle."""
+    if paged_kernel and page_size is None:
+        raise ValueError("paged_kernel=True needs a paged cache "
+                         "(page_size set)")
+    if chunk is None:
+        chunk = chunkable(cfg, cache_len)
     ins = jax.jit(make_batched_insert_step(
         cfg, mesh, cache_len=cache_len, page_size=page_size),
         donate_argnums=(0,) if donate else ())
     dec = jax.jit(make_decode_step(
-        cfg, mesh, cache_len=cache_len, page_size=page_size),
+        cfg, mesh, cache_len=cache_len, page_size=page_size,
+        paged_kernel=paged_kernel),
         donate_argnums=(1,) if donate else ())
     return {
         "cache_len": cache_len,
         "page_size": page_size,
         "donate": donate,
+        "paged_kernel": paged_kernel,
         "prefill": jax.jit(make_prefill_step(cfg, mesh,
                                              cache_len=cache_len)),
         "insert": ins,
@@ -184,6 +204,12 @@ class ServeEngine:
         (default True): the cache is updated in place instead of copied
         per tick.  Must match ``jit_steps`` when both are given;
         ``donate=False`` is the measured A/B leg.
+    paged_kernel : bool, optional
+        Decode attention reads KV pages in place through the fused
+        paged-attention Pallas kernel (the per-tick dense ``page_gather``
+        copy never materialises).  Default False keeps the gather+dense
+        leg — the A/B baseline and bit-exactness oracle.  Requires a
+        paged engine; must match ``jit_steps`` when both are given.
     policy : SchedulerPolicy | str | None, optional
         The decision layer (see :mod:`repro.serve.policy`): None/"reserve"
         keeps worst-case page reservation at admission; "ondemand" turns
@@ -211,7 +237,7 @@ class ServeEngine:
                  prefill_chunk: int | None = None,
                  max_prefill_batch: int | None = None,
                  sync_ticks: bool = False, donate: bool | None = None,
-                 policy=None):
+                 paged_kernel: bool | None = None, policy=None):
         self.cfg = cfg
         self.slots = slots
         self.cache_len = cache_len
@@ -242,11 +268,20 @@ class ServeEngine:
                 "jit_steps were built for donate="
                 f"{steps_donate}, engine asked for donate={donate}")
             donate = steps_donate
+            steps_pk = jit_steps.get("paged_kernel", False)
+            assert paged_kernel is None or paged_kernel == steps_pk, (
+                "jit_steps were built for paged_kernel="
+                f"{steps_pk}, engine asked for paged_kernel={paged_kernel}")
+            paged_kernel = steps_pk
         elif page_size == "auto":
             page_size = auto_page_size(cache_len)
         self.page_size: int | None = page_size
         self.paged = page_size is not None
         self.donate = True if donate is None else donate
+        self.paged_kernel = bool(paged_kernel)
+        if self.paged_kernel and not self.paged:
+            raise ValueError("paged_kernel=True needs a paged engine "
+                             "(page_size is None here)")
         self.policy = make_policy(policy)
         if self.policy.on_demand and not self.paged:
             raise ValueError(
@@ -271,8 +306,8 @@ class ServeEngine:
         if jit_steps is None:
             jit_steps = make_jit_steps(cfg, mesh, cache_len,
                                        page_size=page_size,
-                                       chunk=prefill_chunk is not None,
-                                       donate=self.donate)
+                                       donate=self.donate,
+                                       paged_kernel=self.paged_kernel)
         self.prefill = jit_steps["prefill"]
         self.insert = jit_steps["insert"]
         self.decode = jit_steps["decode"]
@@ -285,11 +320,20 @@ class ServeEngine:
         # rings are extent-bound), decode-replay of the recorded tokens
         # otherwise (bit-exact by construction, a tick per token)
         self._restore_prefill = chunkable(cfg, cache_len)
-        if prefill_chunk is not None and self.chunk is None:
+        if self._restore_prefill and self.chunk is None:
             self.chunk = jax.jit(
                 make_prefill_chunk_step(cfg, mesh, cache_len),
                 donate_argnums=(1,) if self.donate else (),
                 static_argnames=("attn_extent", "want_logits"))
+        # chunk width for prefill-replay restores when the engine has no
+        # steady-state prefill_chunk of its own: chunk-step shapes are
+        # bounded by the chunk geometry (last-chunk widths <= c, extent
+        # buckets <= cache_len/c) however many distinct restore depths
+        # evictions produce, where one-shot prefill would retrace per
+        # distinct prompt+generated length; ~sqrt(cache_len) balances
+        # widths against buckets
+        self.restore_chunk = prefill_chunk or (
+            1 << ((cache_len - 1).bit_length() // 2))
 
         self._params = None if callable(params) else params
         self._params_fn = params if callable(params) else None
@@ -592,8 +636,18 @@ class ServeEngine:
         tj = jnp.asarray(toks)
         pj = None if patches is None else jnp.asarray(patches)
 
-        chunk = (self.policy.chunk_len(self, grp[0].total_len)
-                 if self.chunk is not None else None)
+        if self.chunk is not None and grp[0].resume \
+                and grp[0].restore_tokens is not None:
+            # prefill-replay restore: prompt+generated length varies with
+            # eviction depth, so a one-shot prefill here would pay one
+            # XLA retrace per distinct length.  Route through the chunk
+            # step instead — its shapes are bounded by the chunk width
+            # (<= restore_chunk last-chunk widths + cache_len/chunk
+            # extent buckets) no matter how many evictions restore.
+            chunk = self.restore_chunk
+        else:
+            chunk = (self.policy.chunk_len(self, grp[0].total_len)
+                     if self.chunk is not None else None)
         if chunk is not None:
             st = {"rows_cache": init_cache(self.cfg, bpad, self.cache_len,
                                            jnp.dtype(self.cfg.dtype)),
@@ -1140,6 +1194,7 @@ class ServeEngine:
             "pages_grown": self.stats_pages_grown,
             "policy": self.policy.name,
             "donate": self.donate,
+            "paged_kernel": self.paged_kernel,
             "p50_latency_s": percentile(lats, 0.50),
             "p99_latency_s": percentile(lats, 0.99),
             "p50_ttft_s": percentile(ttfts, 0.50),

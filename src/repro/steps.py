@@ -272,7 +272,8 @@ def make_batched_insert_step(cfg, mesh=None, *, cache_len: int,
 
 
 def make_decode_step(cfg, mesh=None, *, cache_len: int | None = None,
-                     page_size: int | None = None):
+                     page_size: int | None = None,
+                     paged_kernel: bool = False):
     """Masked continuous-batching decode over the slot pool:
     (params, cache, tokens, active[, table]) -> (next_tokens, cache).
 
@@ -291,6 +292,12 @@ def make_decode_step(cfg, mesh=None, *, cache_len: int | None = None,
     paging) or re-point an evicted slot's row at garbage without
     recompiling — the jit sees the same shape either way.
 
+    ``paged_kernel=True`` (paged only) routes the paged attention leaves
+    through the fused Pallas kernel: the block table is walked in-kernel
+    and K/V pages are read in place instead of materialising the dense
+    ``page_gather`` view every tick.  Greedy tokens are identical; the
+    default-off dense-gather leg stays the A/B baseline and oracle.
+
     Donation: safe to jit with ``donate_argnums=(1,)`` — the forward
     pass preserves every cache leaf's shape/dtype (trace-time checked),
     so XLA aliases the whole pool in place and a tick stops copying it.
@@ -299,12 +306,15 @@ def make_decode_step(cfg, mesh=None, *, cache_len: int | None = None,
     paged = page_size is not None
     if paged:
         assert cache_len is not None and cache_len % page_size == 0
+    assert not (paged_kernel and not paged), \
+        "paged_kernel needs a paged cache (page_size set)"
 
     def decode_step(params, cache, tokens, active, table=None):
         with sharding_ctx(mesh, DECODE_RULES):
             pc = cast_tree(params, cfg.dtype)
             pages = ({"table": table, "page_size": page_size,
-                      "cache_len": cache_len} if paged else None)
+                      "cache_len": cache_len, "kernel": paged_kernel}
+                     if paged else None)
             out = forward(pc, cfg, tokens, mode="decode", pos=cache["pos"],
                           cache=cache, pages=pages)
             nxt = jnp.argmax(out["logits"], axis=-1).astype(jnp.int32)

@@ -4,7 +4,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import (flash_attention, flash_attention_ref, rms_norm,
+from repro.kernels import (flash_attention, flash_attention_ref,
+                           paged_decode_attention,
+                           paged_decode_attention_ref,
+                           paged_mla_decode_attention,
+                           paged_mla_decode_attention_ref, rms_norm,
                            rms_norm_ref, ssd_scan, ssd_scan_ref)
 
 
@@ -71,6 +75,130 @@ def test_flash_attention_block_shape_invariance():
             for bq, bk in ((32, 32), (64, 128), (256, 64))]
     for o in outs[1:]:
         _close(o, outs[0], jnp.float32)
+
+
+# ------------------------------------------------------------------ paged
+def _paged_table(b, cache_len, ps, pos, garbage_rest=True):
+    """Per-slot block table covering each slot's ``pos``; every entry
+    past the covered extent stays on the garbage page 0 (the engine's
+    convention for unallocated pages)."""
+    pps = cache_len // ps
+    table = np.zeros((b, pps), np.int32)
+    nxt = 1
+    for i in range(b):
+        for p in range(-(-(int(pos[i]) + 1) // ps)):
+            table[i, p] = nxt
+            nxt += 1
+        if not garbage_rest:
+            for p in range(-(-(int(pos[i]) + 1) // ps), pps):
+                table[i, p] = nxt
+                nxt += 1
+    return jnp.asarray(table), 1 + b * pps
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,hkv,dh,cache_len,ps", [
+    (2, 4, 4, 32, 16, 4),         # MHA
+    (3, 8, 2, 64, 32, 8),         # GQA group 4
+    (2, 4, 1, 32, 16, 2),         # MQA
+    (2, 6, 3, 16, 12, 1),         # page_size 1 (one token per page)
+    (1, 2, 2, 32, 8, 8),          # single page covers the cache
+])
+def test_paged_decode_matches_ref(b, h, hkv, dh, cache_len, ps, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    pos = np.array(jax.random.randint(ks[3], (b,), 0, cache_len))
+    pos[0] = cache_len - 1            # full slot rides every grid page
+    table, num_pages = _paged_table(b, cache_len, ps, pos)
+    q = jax.random.normal(ks[0], (b, 1, h, dh), dtype)
+    kp = jax.random.normal(ks[1], (num_pages, ps, hkv, dh), dtype)
+    vp = jax.random.normal(ks[2], (num_pages, ps, hkv, dh), dtype)
+    out = paged_decode_attention(q, kp, vp, table, jnp.asarray(pos),
+                                 page_size=ps, interpret=True)
+    want = paged_decode_attention_ref(q, kp, vp, table, jnp.asarray(pos),
+                                      page_size=ps)
+    assert out.shape == (b, 1, h, dh)
+    _close(out, want, dtype)
+
+
+@pytest.mark.parametrize("window", [1, 3, 7, 100])
+def test_paged_decode_sliding_window(window):
+    b, h, hkv, dh, cache_len, ps = 3, 4, 2, 32, 24, 4
+    ks = jax.random.split(jax.random.PRNGKey(8), 4)
+    pos = np.array(jax.random.randint(ks[3], (b,), 0, cache_len))
+    table, num_pages = _paged_table(b, cache_len, ps, pos)
+    q = jax.random.normal(ks[0], (b, 1, h, dh), jnp.float32)
+    kp = jax.random.normal(ks[1], (num_pages, ps, hkv, dh), jnp.float32)
+    vp = jax.random.normal(ks[2], (num_pages, ps, hkv, dh), jnp.float32)
+    out = paged_decode_attention(q, kp, vp, table, jnp.asarray(pos),
+                                 page_size=ps, window=window,
+                                 interpret=True)
+    want = paged_decode_attention_ref(q, kp, vp, table, jnp.asarray(pos),
+                                      page_size=ps, window=window)
+    _close(out, want, jnp.float32)
+
+
+@pytest.mark.parametrize("b,h,rkv,dr,cache_len,ps", [
+    (2, 4, 32, 16, 16, 4),
+    (3, 2, 16, 8, 12, 1),         # page_size 1
+    (1, 8, 64, 32, 8, 8),         # single page
+])
+def test_paged_mla_decode_matches_ref(b, h, rkv, dr, cache_len, ps):
+    ks = jax.random.split(jax.random.PRNGKey(9), 5)
+    pos = np.array(jax.random.randint(ks[4], (b,), 0, cache_len))
+    pos[-1] = cache_len - 1
+    table, num_pages = _paged_table(b, cache_len, ps, pos)
+    q_lat = jax.random.normal(ks[0], (b, 1, h, rkv), jnp.float32)
+    q_rope = jax.random.normal(ks[1], (b, 1, h, dr), jnp.float32)
+    ckv = jax.random.normal(ks[2], (num_pages, ps, rkv), jnp.float32)
+    krope = jax.random.normal(ks[3], (num_pages, ps, dr), jnp.float32)
+    scale = (rkv + dr) ** -0.5
+    out = paged_mla_decode_attention(q_lat, q_rope, ckv, krope, table,
+                                     jnp.asarray(pos), page_size=ps,
+                                     scale=scale, interpret=True)
+    want = paged_mla_decode_attention_ref(q_lat, q_rope, ckv, krope,
+                                          table, jnp.asarray(pos),
+                                          page_size=ps, scale=scale)
+    assert out.shape == (b, 1, h, rkv)
+    _close(out, want, jnp.float32)
+
+
+def test_paged_decode_garbage_page_is_inert():
+    """Unallocated table entries point at page 0; whatever it holds
+    (here: huge values) must never leak into any slot's output —
+    the in-kernel walk masks by ``pos`` exactly like the gather leg."""
+    b, h, hkv, dh, cache_len, ps = 3, 4, 2, 32, 16, 4
+    ks = jax.random.split(jax.random.PRNGKey(10), 3)
+    pos = np.asarray([0, 5, cache_len - 1])   # ragged, incl. both edges
+    table, num_pages = _paged_table(b, cache_len, ps, pos)
+    q = jax.random.normal(ks[0], (b, 1, h, dh), jnp.float32)
+    kp = jax.random.normal(ks[1], (num_pages, ps, hkv, dh), jnp.float32)
+    vp = jax.random.normal(ks[2], (num_pages, ps, hkv, dh), jnp.float32)
+    poisoned = (kp.at[0].set(1e4), vp.at[0].set(1e4))
+    out = paged_decode_attention(q, *poisoned, table, jnp.asarray(pos),
+                                 page_size=ps, interpret=True)
+    clean = paged_decode_attention(q, kp, vp, table, jnp.asarray(pos),
+                                   page_size=ps, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(clean))
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_paged_decode_allocated_but_future_pages_masked():
+    """Tables where *allocated* pages extend past ``pos`` (the engine
+    allocates a page before the tick that first writes it): positions
+    beyond ``pos`` must still be masked out."""
+    b, h, hkv, dh, cache_len, ps = 2, 2, 2, 16, 16, 4
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    pos = np.asarray([2, 9])
+    table, num_pages = _paged_table(b, cache_len, ps, pos,
+                                    garbage_rest=False)
+    q = jax.random.normal(ks[0], (b, 1, h, dh), jnp.float32)
+    kp = jax.random.normal(ks[1], (num_pages, ps, hkv, dh), jnp.float32)
+    vp = jax.random.normal(ks[2], (num_pages, ps, hkv, dh), jnp.float32)
+    out = paged_decode_attention(q, kp, vp, table, jnp.asarray(pos),
+                                 page_size=ps, interpret=True)
+    want = paged_decode_attention_ref(q, kp, vp, table, jnp.asarray(pos),
+                                      page_size=ps)
+    _close(out, want, jnp.float32)
 
 
 # -------------------------------------------------------------------- ssd

@@ -192,24 +192,30 @@ class OnDemandFuzzEvict(FuzzEvictPolicy, OnDemandPolicy):
 @pytest.mark.parametrize("layout,donate", [("dense", True),
                                            ("dense", False),
                                            ("paged", True),
-                                           ("paged", False)])
+                                           ("paged", False),
+                                           ("kernel", True),
+                                           ("kernel", False)])
 def test_evict_grid_dense_paged_donation(layout, donate, built):
-    """(a) across the grid: forced fuzz evictions on dense x paged,
-    donation on x off — including an eos request whose stop fired
-    *before* an eviction could re-check it (restore must not re-emit or
-    re-stop).  Tokens bit-exact, (b) the pinning invariant holds."""
+    """(a) across the grid: forced fuzz evictions on dense x paged x
+    fused-paged-kernel, donation on x off — including an eos request
+    whose stop fired *before* an eviction could re-check it (restore
+    must not re-emit or re-stop).  Tokens bit-exact (the kernel rows
+    therefore bit-identical to the gather rows), (b) the pinning
+    invariant holds."""
     b = _build("qwen2.5-14b", built)
-    ps = b["ps"] if layout == "paged" else None
+    ps = b["ps"] if layout != "dense" else None
     steps = (b["steps"] if layout == "paged" and donate else
              make_jit_steps(b["cfg"], cache_len=b["cache_len"],
-                            page_size=ps, donate=donate))
-    policy = (OnDemandFuzzEvict(seed=7) if layout == "paged"
+                            page_size=ps, donate=donate,
+                            paged_kernel=layout == "kernel"))
+    policy = (OnDemandFuzzEvict(seed=7) if layout != "dense"
               else FuzzEvictPolicy(seed=7))
     eos = [None] * N_REQ
     eos[0] = int(b["ref"][0, 2])      # stops at its 3rd emitted token
     stats = _run(b, policy, jit_steps=steps, page_size=ps, eos=eos)
     assert stats["evictions"] > 0
     assert stats["donate"] is donate
+    assert stats["paged_kernel"] is (layout == "kernel")
 
 
 @pytest.mark.slow
@@ -227,6 +233,33 @@ def test_ondemand_never_deadlocks_under_severe_pressure(seed, built):
                  watchdog_s=120)
     assert stats["requests"] == N_REQ
     assert stats["admission_blocks"] + stats["evictions"] > 0
+
+
+@pytest.mark.slow
+def test_restore_retraces_bounded(built):
+    """Eviction restores at many distinct depths must not pay one XLA
+    retrace per distinct prompt+generated length: prefill-replay routes
+    through the chunk step, whose shape set is bounded by the chunk
+    geometry (last-chunk widths x extent buckets), not the restore
+    count.  The one-shot prefill jit only ever sees new-prompt rounds —
+    batch padded to powers of two, so at most 1 + log2(slots) shapes."""
+    b = _build("qwen2.5-14b", built)
+    slots = 3
+    steps = make_jit_steps(b["cfg"], cache_len=b["cache_len"],
+                           page_size=b["ps"])   # fresh: cache sizes ours
+    assert steps["chunk"] is not None, "chunkable config must auto-chunk"
+    policy = OnDemandFuzzEvict(seed=3, period=2, max_evictions=6)
+    stats = _run(b, policy, jit_steps=steps, slots=slots)
+    assert stats["restores"] >= 4, "fuzz produced too few restores"
+    # restores happen at different ticks, so their prompt+generated
+    # lengths differ — under one-shot-restore routing each distinct
+    # depth would add a (1, depth) prefill trace and this bound breaks
+    assert steps["prefill"]._cache_size() <= 1 + (slots - 1).bit_length()
+    c = 1 << ((b["cache_len"] - 1).bit_length() // 2)
+    n_buckets = -(-b["cache_len"] // c)
+    assert steps["chunk"]._cache_size() <= (c + 1) * n_buckets, (
+        "chunk-step traces exceeded the geometry bound — restore "
+        "routing is leaking per-depth shapes")
 
 
 @pytest.mark.slow

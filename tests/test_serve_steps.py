@@ -64,6 +64,11 @@ def _build(arch, built):
                 cfg, cache_len=cache_len, page_size=PAGE_SIZE)),
             decode_paged=jax.jit(make_decode_step(
                 cfg, cache_len=cache_len, page_size=PAGE_SIZE)),
+            # fused-kernel leg: decode attention walks the block table
+            # in-kernel instead of materialising the dense gather
+            decode_paged_kernel=jax.jit(make_decode_step(
+                cfg, cache_len=cache_len, page_size=PAGE_SIZE,
+                paged_kernel=True)),
             chunk=(jax.jit(make_prefill_chunk_step(cfg,
                                                    cache_len=cache_len),
                            static_argnames=("attn_extent", "want_logits"))
@@ -82,6 +87,9 @@ def _build(arch, built):
             decode_paged_don=jax.jit(make_decode_step(
                 cfg, cache_len=cache_len, page_size=PAGE_SIZE),
                 donate_argnums=(1,)),
+            decode_paged_kernel_don=jax.jit(make_decode_step(
+                cfg, cache_len=cache_len, page_size=PAGE_SIZE,
+                paged_kernel=True), donate_argnums=(1,)),
             chunk_don=(jax.jit(make_prefill_chunk_step(
                 cfg, cache_len=cache_len), donate_argnums=(1,),
                 static_argnames=("attn_extent", "want_logits"))
@@ -439,6 +447,38 @@ def test_schedule_fuzz_donation_grid_matches_oneshot(arch, layout, donate,
     _run_schedule(b, 7, ps, insert, decode, chunk=chunk,
                   chunk_fn=chunk_fn,
                   check_alias=donate and arch == "qwen2.5-14b")
+
+
+@pytest.mark.parametrize("arch", FUZZ_ARCHS)
+@pytest.mark.parametrize("donate", [False, True])
+def test_paged_kernel_schedule_fuzz_matches_oneshot(arch, donate, built):
+    """The fused paged-attention kernel leg of the fuzz grid: the same
+    seeded schedules (arrival order, slot churn, tight-pool admission,
+    chunk boundaries) with decode attention reading K/V pages in place —
+    greedy streams must stay bit-identical to the one-shot rows across
+    all frontends plus the SSM hybrid, donated and copying alike."""
+    b = _build(arch, built)
+    suffix = "_don" if donate else ""
+    chunk = chunk_fn = None
+    if b["chunk"] is not None:
+        chunk, chunk_fn = 3, (b["chunk_don"] if donate else b["chunk"])
+    _run_schedule(b, 11 if donate else 4, PAGE_SIZE,
+                  b["insert_paged" + suffix],
+                  b["decode_paged_kernel" + suffix],
+                  chunk=chunk, chunk_fn=chunk_fn,
+                  check_alias=donate and arch == "qwen2.5-14b")
+
+
+def test_paged_kernel_page_size_one_degenerate(built):
+    """page_size=1 under the fused kernel: one token per page — the
+    kernel grid runs one page per position and must still match."""
+    b = _build("qwen2.5-14b", built)
+    insert = jax.jit(make_batched_insert_step(
+        b["cfg"], cache_len=b["cache_len"], page_size=1))
+    decode = jax.jit(make_decode_step(
+        b["cfg"], cache_len=b["cache_len"], page_size=1,
+        paged_kernel=True))
+    _run_schedule(b, 0, 1, insert, decode)
 
 
 def test_paged_on_demand_growth_matches_oneshot(built):

@@ -1,0 +1,138 @@
+"""Cache-topology detection for the sharded scheduler's victim walk:
+synthetic sysfs trees -> distance matrices, graceful flat/garbage
+fallback, and the runtime consuming "auto" without behaviour change on
+flat hosts.  Inner-loop fast (no jit)."""
+import pytest
+
+from repro.core import ShardedReadyQueue, UMTRuntime, detect_topology
+from repro.core.topology import parse_cpu_list
+
+
+def _mk_cpu(root, cpu, caches, node=None):
+    """caches: [(level, type, shared_cpu_list_str)]"""
+    cdir = root / f"cpu{cpu}" / "cache"
+    for i, (level, typ, shared) in enumerate(caches):
+        idir = cdir / f"index{i}"
+        idir.mkdir(parents=True)
+        (idir / "level").write_text(f"{level}\n")
+        (idir / "type").write_text(f"{typ}\n")
+        (idir / "shared_cpu_list").write_text(f"{shared}\n")
+    if node is not None:
+        (root / f"cpu{cpu}" / f"node{node}").mkdir()
+
+
+def _two_socket(root):
+    """4 cpus: L2 shared within pairs {0,1} {2,3}, L3 per socket, and the
+    pairs sit on NUMA nodes 0/1."""
+    for cpu in range(4):
+        pair = "0-1" if cpu < 2 else "2-3"
+        _mk_cpu(root, cpu,
+                [(1, "Data", str(cpu)), (1, "Instruction", str(cpu)),
+                 (2, "Unified", pair), (3, "Unified", pair)],
+                node=cpu // 2)
+
+
+def test_parse_cpu_list():
+    assert parse_cpu_list("0-3,8,10-11") == {0, 1, 2, 3, 8, 10, 11}
+    assert parse_cpu_list("5") == {5}
+    assert parse_cpu_list("") == set()
+
+
+def test_two_socket_matrix(tmp_path):
+    _two_socket(tmp_path)
+    m = detect_topology(4, root=str(tmp_path))
+    assert m is not None
+    for i in range(4):
+        assert m[i][i] == 0
+    # L2 sibling closer than the other socket
+    assert m[0][1] < m[0][2] and m[0][1] < m[0][3]
+    assert m[2][3] < m[2][0]
+    # and the queue's victim walk honours it
+    q = ShardedReadyQueue(4, topology=m)
+    assert q._steal_order[0][0] == 1
+    assert q._steal_order[3][0] == 2
+
+
+def test_virtual_shards_wrap_modulo(tmp_path):
+    """6 shards on 4 cpus: shard 4 is cpu 0 again — distance 0 to shard
+    0 and the L2-sibling distance to shard 1."""
+    _two_socket(tmp_path)
+    m = detect_topology(6, root=str(tmp_path))
+    assert m is not None
+    assert m[4][0] == 0
+    assert m[4][1] == m[0][1]
+    assert len(m) == 6 and all(len(r) == 6 for r in m)
+
+
+def test_flat_hierarchy_returns_none(tmp_path):
+    """Private caches only (this container's shape): nothing to prefer,
+    keep the ring walk."""
+    for cpu in range(4):
+        _mk_cpu(tmp_path, cpu,
+                [(1, "Data", str(cpu)), (2, "Unified", str(cpu))])
+    assert detect_topology(4, root=str(tmp_path)) is None
+
+
+def test_shared_l3_only_is_flat(tmp_path):
+    """One die, all cpus under one L3: every off-diagonal distance is
+    equal -> None (the ring walk is already optimal)."""
+    for cpu in range(4):
+        _mk_cpu(tmp_path, cpu,
+                [(1, "Data", str(cpu)), (3, "Unified", "0-3")])
+    assert detect_topology(4, root=str(tmp_path)) is None
+
+
+def test_numa_breaks_the_tie(tmp_path):
+    """No shared caches at all, but two NUMA nodes: same-node cpus are
+    still preferred over cross-node ones."""
+    for cpu in range(4):
+        _mk_cpu(tmp_path, cpu, [(1, "Data", str(cpu))], node=cpu // 2)
+    m = detect_topology(4, root=str(tmp_path))
+    assert m is not None
+    assert m[0][1] < m[0][2]
+
+
+def test_garbage_sysfs_returns_none(tmp_path):
+    assert detect_topology(4, root=str(tmp_path / "nope")) is None
+    (tmp_path / "cpu0" / "cache" / "index0").mkdir(parents=True)
+    (tmp_path / "cpu0" / "cache" / "index0" / "level").write_text("L2!\n")
+    assert detect_topology(2, root=str(tmp_path)) is None
+
+
+def test_runtime_auto_topology(tmp_path, monkeypatch):
+    """The runtime's default resolves "auto" through detect_topology and
+    hands the matrix to its sharded queue."""
+    _two_socket(tmp_path)
+    import repro.core.runtime as rtmod
+    monkeypatch.setattr(
+        rtmod, "detect_topology",
+        lambda n: detect_topology(n, root=str(tmp_path)))
+    with UMTRuntime(n_cores=4, trace=False) as rt:
+        assert rt.topology is not None
+        assert rt.ready._steal_order[0][0] == 1
+    with UMTRuntime(n_cores=4, trace=False, topology=None) as rt:
+        assert rt.topology is None          # explicit flat: ring walk
+        assert rt.ready._steal_order[0] == (1, 2, 3)
+    with pytest.raises(AssertionError):
+        UMTRuntime(n_cores=2, trace=False, topology="bogus")
+
+
+def test_runtime_spin_counter_defaults_off():
+    """spin_before_park_us=0 (paper-strict) never spins; a positive
+    window claims trickled tasks without a park/wake round trip."""
+    with UMTRuntime(n_cores=1, trace=False) as rt:
+        done = []
+        rt.submit(done.append, 1)
+        rt.wait_all()
+        assert rt.stats()["spin_claims"] == 0
+    import time
+    with UMTRuntime(n_cores=1, trace=False,
+                    spin_before_park_us=200_000) as rt:
+        done = []
+        for i in range(5):
+            rt.submit(done.append, i)
+            time.sleep(0.01)
+        rt.wait_all()
+        s = rt.stats()
+        assert len(done) == 5
+        assert s["spin_claims"] > 0
