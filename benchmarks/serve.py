@@ -47,7 +47,12 @@ Beyond the load sweep, three targeted phases (ISSUE 3/4 acceptance):
     tokens/s and tick p50/p99 per leg on shared interleaved repeats,
     greedy tokens hard-asserted identical (off-TPU the kernel leg runs
     the interpret-mode emulation, so the row is integration evidence;
-    the gather-elimination proof is benchmarks.kernels' HLO assertion).
+    the gather-elimination proof is benchmarks.kernels' HLO assertion);
+  * shared-prefix KV reuse A/B (ISSUE 7) — the radix prefix cache on vs
+    off at equal KV memory on a long shared system prompt + short unique
+    tails: tokens bit-identical on both legs and prefix_tokens_saved > 0
+    hard-asserted, hit tokens/s strictly above cold PASS-gated
+    (``PREFIX_REUSE,...`` line).
 
   python -m benchmarks.serve [--loads 32,256] [--requests 32] [--slots 4]
                              [--prompt-len 16] [--gen 16] [--cores 4]
@@ -685,6 +690,135 @@ def bench_policy_phases(cfg, params, steps, prefill, serve_step, *, slots,
     return out
 
 
+def bench_prefix_reuse(cfg, params, *, slots, prompt_len, gen, cores,
+                       n_req, page_size, seed, load=64.0,
+                       repeats=3) -> list[ServeResult]:
+    """ISSUE 7 acceptance phase: shared-prefix KV reuse (radix cache
+    over refcounted pages) A/B'd against cold serving at equal KV
+    memory.
+
+    Every request carries the same *long* system prompt plus a short
+    unique tail — the agent/chat pattern RadixAttention targets, sized
+    so the shared prefill dominates per-request compute (long prefix,
+    short tail, short decode: exactly the regime the optimisation is
+    for).  One warm-up request runs to completion first (populating the
+    radix trie on the hit leg), then the same Poisson trace runs with
+    ``prefix_cache="on"`` and ``"off"`` on identical page budgets,
+    interleaved ``repeats`` times with per-leg medians.
+
+    Hard-asserted (not timing): greedy tokens on *both* legs are
+    bit-identical to the cold one-shot reference, every post-warm
+    request on the hit leg is a trie hit, and
+    ``prefix_tokens_saved > 0``.  The PASS verdict additionally
+    requires hit tokens/s strictly above cold."""
+    sys_len = max(2 * page_size, page_size * ((8 * prompt_len)
+                                              // page_size))
+    cache_len = _cache_len(cfg, sys_len + prompt_len, gen)
+    if cfg.frontend == "vision_patches" or not chunkable(cfg, cache_len):
+        print("prefix-reuse phase: config cannot serve hits bit-exactly "
+              "(no chunk-extent invariance) — skipped", flush=True)
+        return []
+    ps = page_size if cache_len % page_size == 0 else \
+        auto_page_size(cache_len)
+    base, _ = _prompts(cfg, 1, sys_len, seed=21)
+    tails, _ = _prompts(cfg, n_req, prompt_len, seed=22)
+    prompts = np.concatenate(
+        [np.repeat(np.asarray(base), n_req, 0), np.asarray(tails)], axis=1)
+    gens = np.full(n_req, gen)
+
+    prefill = jax.jit(make_prefill_step(cfg, cache_len=cache_len))
+    serve_step = jax.jit(make_serve_step(cfg))
+    ref = np.asarray(greedy_oneshot(prefill, serve_step, params,
+                                    jnp.asarray(prompts), None, gen))
+    # both legs run chunked prefill (the long-prompt production setting,
+    # PR 3): the cold leg pays ~sys/chunk cache-append dispatches per
+    # request, the hit leg only the tail's — the dispatch+compute the
+    # radix cache exists to skip
+    chunk = max(4, sys_len // 8)
+    steps = make_jit_steps(cfg, cache_len=cache_len, page_size=ps,
+                           chunk=True)
+    warm_engine_shapes(cfg, params, steps, prompts, None, slots=slots,
+                       cache_len=cache_len, cores=cores,
+                       prefill_chunk=chunk)
+    # equal KV memory on both legs: the dense-equivalent pool plus one
+    # slot-equivalent of headroom so trie capital (the warm request's
+    # pages idling at refcount 0) never fights live slots for pages
+    pps = cache_len // ps
+    num_pages = slots * pps + pps + 1
+    gaps = np.random.default_rng(seed).exponential(1.0 / load, n_req - 1)
+
+    def leg(prefix):
+        warm = Request(0, prompts[0], max_new_tokens=int(gens[0]))
+        rest = [Request(i, prompts[i], max_new_tokens=int(gens[i]))
+                for i in range(1, n_req)]
+        with ServeEngine(cfg, params, slots=slots, cache_len=cache_len,
+                         umt=True, n_cores=cores, jit_steps=steps,
+                         page_size=ps, num_pages=num_pages,
+                         prefill_chunk=chunk,
+                         prefix_cache=prefix) as eng:
+            eng.submit(warm)
+            warm.wait(timeout=300)      # trie warmed before the trace
+            t0 = time.monotonic()
+            _feed(eng.submit, eng.close, rest, gaps)
+            eng.join()
+            wall = time.monotonic() - t0
+            st = eng.stats()
+        for r in [warm] + rest:
+            got = np.asarray(r.out_tokens, np.int32)
+            assert np.array_equal(got, ref[r.rid, :len(got)]), (
+                f"prefix-reuse A/B token mismatch: prefix={prefix} "
+                f"request {r.rid} — reuse changed the stream")
+        return st, gen * (n_req - 1) / wall, wall
+
+    runs = {"on": [], "off": []}
+    for _ in range(repeats):
+        for prefix in ("on", "off"):          # interleaved A/B
+            runs[prefix].append(leg(prefix))
+    out = []
+    med = {}
+    for prefix, rs in runs.items():
+        ts = sorted(t for _, t, _ in rs)
+        med[prefix] = ts[len(ts) // 2]
+        st, _, wall = rs[-1]
+        if prefix == "on":
+            assert st["prefix_hits"] >= n_req - 1, (
+                "shared-prompt trace did not hit on every post-warm "
+                f"request ({st['prefix_hits']}/{n_req - 1})")
+            assert st["prefix_tokens_saved"] > 0, (
+                "prefix hits saved no prefill tokens")
+        else:
+            assert st["prefix_hits"] == 0
+        r = ServeResult(
+            name=f"serve_prefix_{prefix}", load=load, requests=n_req,
+            slots=slots, wall_s=wall, tokens_s=med[prefix],
+            occupancy=st["occupancy"],
+            p50_s=_pct([x or 0.0 for x in (st["p50_tick_s"],)], 0.5),
+            p99_s=0.0, pages_peak=st.get("pages_used_peak"),
+            pages_capacity=st.get("pages_capacity"),
+            max_live=st["max_live_slots"],
+            prefill_calls=st["prefill_calls"])
+        out.append(r)
+        print(r.row(), flush=True)
+    st_on = runs["on"][-1][0]
+    ratio = med["on"] / med["off"]
+    ok = ratio > 1.0
+    print(f"PREFIX_REUSE,sys={sys_len},tail={prompt_len},gen={gen},"
+          f"req={n_req},hits={st_on['prefix_hits']},"
+          f"tokens_saved={st_on['prefix_tokens_saved']},"
+          f"cow_forks={st_on['cow_forks']},"
+          f"page_shares={st_on['page_shares']},"
+          f"on_tokens_s={med['on']:.1f},off_tokens_s={med['off']:.1f},"
+          f"ratio={ratio:.2f}x,"
+          f"{'PASS' if ok else 'FAIL'}", flush=True)
+    print(f"  -> prefix-reuse A/B (median of {repeats}, equal "
+          f"{num_pages - 1}-page budget): hit leg "
+          f"{'strictly above' if ok else 'NOT above'} cold at "
+          f"{ratio:.2f}x tokens/s; tokens bit-identical on both legs, "
+          f"{st_on['prefix_tokens_saved']} prefill tokens skipped",
+          flush=True)
+    return out
+
+
 def main(argv=None) -> list[ServeResult]:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-14b")
@@ -841,6 +975,13 @@ def main(argv=None) -> list[ServeResult]:
             cache_len=cache_len, page_size=page_size,
             prompt_len=args.prompt_len, gen=args.gen, cores=args.cores,
             n_req=args.requests, seed=args.seed))
+
+        # phase: shared-prefix KV reuse A/B (ISSUE 7) — radix cache on
+        # vs off at equal KV memory, warm trie, hit tokens/s vs cold
+        results.extend(bench_prefix_reuse(
+            cfg, params, slots=args.slots, prompt_len=args.prompt_len,
+            gen=args.gen, cores=args.cores, n_req=args.requests,
+            page_size=page_size, seed=args.seed))
 
         # phase: chunked prefill bounds decode-tick jitter (chunk-exact,
         # token-only frontends: the mix builder has no patch plumbing)

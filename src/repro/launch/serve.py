@@ -92,7 +92,8 @@ def serve_engine(cfg, params, mesh, args):
                      else None,
                      donate=not args.no_donate,
                      paged_kernel=args.paged_kernel,
-                     policy=args.policy) as eng:
+                     policy=args.policy,
+                     prefix_cache=args.prefix_cache) as eng:
         reqs = []
         for i in range(args.requests):
             reqs.append(Request(
@@ -123,6 +124,12 @@ def serve_engine(cfg, params, mesh, args):
         "admission_blocks": stats["admission_blocks"],
         "evictions": stats["evictions"],
         "restores": stats["restores"],
+        "prefix_cache": stats["prefix_cache"],
+        "prefix_hits": stats["prefix_hits"],
+        "prefix_tokens_saved": stats["prefix_tokens_saved"],
+        "cow_forks": stats["cow_forks"],
+        "shared_pages": stats.get("shared_pages"),
+        "pages_cached": stats.get("pages_cached"),
         "prefill_calls": stats["prefill_calls"],
         "prefill_chunks": stats["prefill_chunks"],
         "wall_s": round(wall, 3),
@@ -176,6 +183,13 @@ def serve(argv=None):
                     help="engine: scheduler policy — worst-case page "
                          "reservation at admission, or on-demand paging "
                          "with preemption-by-eviction (paged only)")
+    ap.add_argument("--prefix-cache", choices=("auto", "on", "off"),
+                    default="auto",
+                    help="engine: shared-prefix KV reuse (radix cache "
+                         "over refcounted pages).  auto enables it on "
+                         "paged + chunk-exact configs; off is the A/B "
+                         "leg; on fails loudly if the config cannot be "
+                         "bit-exact")
     args = ap.parse_args(argv)
     if args.requests <= 0:
         args.requests = args.batch

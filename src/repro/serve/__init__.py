@@ -78,6 +78,29 @@ and restored later by replaying prefill over prompt + generated tokens
 (recompute-on-restore, bit-exact — tested).  Page reuse across slots can
 never corrupt: dead slots' tables point at the reserved garbage page 0.
 
+Shared-prefix KV reuse (radix prefix cache)
+-------------------------------------------
+On top of the pager's per-page refcounts, a radix trie
+(:class:`repro.serve.prefix.PrefixCache`) keyed on full-page token runs
+maps prompt prefixes to the physical pages that already hold their K/V.
+Admission matches a prompt's longest cached prefix, points the new
+slot's block table at the *shared* pages (refcount +1 each; the paged
+decode kernel reads them unchanged), and prefills **only the uncached
+tail** — a gather step copies the matched content into the slot's row
+cache and the chunked-prefill machinery appends from the divergence
+position, bit-identical to a cold prefill (the ``chunkable`` gate is
+exactly the extent-invariance this needs; MoE/SSM/short-SWA configs
+bypass transparently).  A partially-matched divergence page is forked
+copy-on-write: its content rides the same gather, the fork lands on a
+fresh private page, and the source is never written — the donated
+insert's write path sees the garbage page wherever the table holds a
+shared id.  Finished and evicted slots donate their complete pages to
+the trie (refcount 0, still allocated: idle reuse capital); reclaim is
+LRU over refcount-0 leaves, surfaced to the policy
+(``SchedulerPolicy.prefix_evict``) before an allocation shortfall
+becomes an admission block or a preemption.  ``prefix_cache="off"`` is
+the benchmark A/B leg.
+
 Usage
 -----
 ::
@@ -105,9 +128,11 @@ from .kvstate import KVState, alias_safe
 from .pager import GARBAGE_PAGE, PagePool
 from .policy import (POLICIES, OnDemandPolicy, SchedulerPolicy, SlotView,
                      make_policy)
+from .prefix import PrefixCache, PrefixMatch
 from .request import Request, RequestQueue
 
 __all__ = ["ServeEngine", "Request", "RequestQueue", "make_jit_steps",
            "KVState", "alias_safe", "PagePool", "GARBAGE_PAGE",
            "auto_page_size", "SchedulerPolicy", "OnDemandPolicy",
-           "SlotView", "make_policy", "POLICIES"]
+           "SlotView", "make_policy", "POLICIES", "PrefixCache",
+           "PrefixMatch"]

@@ -82,9 +82,12 @@ import numpy as np
 from ..core import UMTRuntime, io
 from ..steps import (chunkable, init_cache, make_batched_insert_step,
                      make_decode_step, make_prefill_chunk_step,
-                     make_prefill_step, make_serve_step)
+                     make_prefill_step, make_prefix_gather_step,
+                     make_serve_step)
 from .kvstate import KVState, alias_safe
+from .pager import GARBAGE_PAGE
 from .policy import SchedulerPolicy, SlotView, make_policy
+from .prefix import PrefixCache
 from .request import Request, RequestQueue
 
 try:  # jax is present everywhere we run; guard only for doc tooling
@@ -166,6 +169,13 @@ def make_jit_steps(cfg, mesh=None, cache_len: int = 64, *,
                           donate_argnums=(1,) if donate else (),
                           static_argnames=("attn_extent", "want_logits"))
                   if chunk else None),
+        # prefix-cache hit path (pure read of the pool — never donated):
+        # gathers a matched prefix's shared pages into a fresh B=1 row
+        # cache that seeds the tail chunk prefill
+        "gather": (jax.jit(make_prefix_gather_step(
+            cfg, mesh, cache_len=cache_len, page_size=page_size))
+            if page_size is not None and chunkable(cfg, cache_len)
+            else None),
     }
 
 
@@ -216,6 +226,18 @@ class ServeEngine:
         on on-demand paging with preemption-by-eviction (paged engines
         only).  Any ``SchedulerPolicy`` instance plugs in custom
         decisions without touching the mechanism here.
+    prefix_cache : bool | "on" | "off" | "auto" | None, optional
+        Shared-prefix KV reuse (SGLang-style radix cache over the
+        refcounted page pool): admission matches a prompt's longest
+        cached prefix, points the slot's block table at the shared
+        pages, and prefills only the uncached tail (copy-on-write fork
+        at the divergence page).  Default ``None``/"auto" turns it on
+        exactly when it can be bit-exact — a paged engine on a
+        chunk-exact config (``repro.steps.chunkable``); non-qualifying
+        configs (dense cache, MoE, SSM/SSD, short SWA rings) bypass it
+        transparently.  "on" raises on a non-qualifying engine; "off"
+        disables it (the benchmark A/B leg).  Requests with ``patches``
+        never match (the trie keys on token ids alone).
     sync_ticks : bool
         Block on each decode tick before timestamping it — makes the
         tick-interval stats measure real compute cadence (benchmarks);
@@ -237,7 +259,8 @@ class ServeEngine:
                  prefill_chunk: int | None = None,
                  max_prefill_batch: int | None = None,
                  sync_ticks: bool = False, donate: bool | None = None,
-                 paged_kernel: bool | None = None, policy=None):
+                 paged_kernel: bool | None = None, policy=None,
+                 prefix_cache: bool | str | None = None):
         self.cfg = cfg
         self.slots = slots
         self.cache_len = cache_len
@@ -335,6 +358,26 @@ class ServeEngine:
         self.restore_chunk = prefill_chunk or (
             1 << ((cache_len - 1).bit_length() // 2))
 
+        # shared-prefix KV reuse: qualifies exactly when the hit path can
+        # be bit-exact — paged pool (shareable pages) + chunk-exact
+        # prefill (the tail chunks reproduce the cold logits)
+        can_prefix = self.paged and self._restore_prefill
+        if prefix_cache in (True, "on"):
+            if not can_prefix:
+                raise ValueError(
+                    f"{cfg.name}: prefix_cache='on' needs a paged engine "
+                    "on a chunk-exact config (repro.steps.chunkable) — "
+                    "the hit path gathers shared pages into a row cache "
+                    "and chunk-prefills the tail bit-exactly")
+            self._use_prefix = True
+        elif prefix_cache in (False, "off"):
+            self._use_prefix = False
+        elif prefix_cache in (None, "auto"):
+            self._use_prefix = can_prefix
+        else:
+            raise ValueError(f"prefix_cache={prefix_cache!r}: pick "
+                             "True/'on', False/'off' or None/'auto'")
+
         self._params = None if callable(params) else params
         self._params_fn = params if callable(params) else None
         self._params_ready = threading.Event()
@@ -350,6 +393,19 @@ class ServeEngine:
                           num_pages=num_pages)
         self.pager = self.kv.pager
         self.pages_per_slot = self.kv.pages_per_slot
+        # prefix trie + its gather jit; the pool lock orders the gather
+        # dispatch (pure read of the live cache version) before any
+        # donating dispatch of the same version (decode tick, insert) —
+        # FIFO device execution then guarantees the gather reads the
+        # buffers before the donating computation recycles them
+        self.prefix = (PrefixCache(self.pager, page_size)
+                       if self._use_prefix else None)
+        self.gather = None
+        if self.prefix is not None:
+            self.gather = jit_steps.get("gather") or jax.jit(
+                make_prefix_gather_step(cfg, mesh, cache_len=cache_len,
+                                        page_size=page_size))
+        self._pool_lock = threading.Lock()
         extra = ((cfg.n_codebooks,) if cfg.frontend == "audio_codebooks"
                  else ())
         # hot-path state is device-resident: the decode loop never syncs
@@ -404,6 +460,11 @@ class ServeEngine:
         self.stats_evictions = 0
         self.stats_restores = 0
         self.stats_pages_grown = 0
+        # prefix-cache counters (satellite of the pager/trie stats):
+        # tokens_saved = prompt positions the hit path never prefilled
+        self.stats_prefix_hits = 0
+        self.stats_prefix_tokens_saved = 0
+        self.stats_cow_forks = 0
 
         # donation sanity, once per jit_steps dict (abstract eval only,
         # no compile): every cache leaf must come out of each donating
@@ -555,7 +616,16 @@ class ServeEngine:
                 "audio-codebook frontends")
         return None
 
+    def _drop_prefix_hold(self, req: Request):
+        """Release the pager holds a request's prefix match still
+        carries — failure/finish paths where the admission that would
+        have adopted them never happened (or already did: no-op)."""
+        if req.prefix_hold is not None and self.prefix is not None:
+            self.prefix.release(req.prefix_hold)
+            req.prefix_hold = None
+
     def _finish_failed(self, req: Request, exc: BaseException):
+        self._drop_prefix_hold(req)
         if not req.done.is_set():
             req.error = exc
             req.t_done = time.monotonic()
@@ -620,7 +690,17 @@ class ServeEngine:
         Long prompts under ``prefill_chunk`` do not prefill here: the
         group is handed to a chunk *continuation chain* (one UMT task
         per chunk, see :meth:`_prefill_chunk_task`) and leaves
-        ``remaining`` — the chain owns its accounting from then on."""
+        ``remaining`` — the chain owns its accounting from then on.
+
+        Prefix-cache hits leave the group first: each hit becomes its
+        own tail-only chunk chain (B=1 — its prefill extent differs from
+        the cold rows'), so a warm prompt never drags a cold batch
+        through a full prefill, and vice versa."""
+        if self.prefix is not None and grp[0].patches is None:
+            grp = [r for r in grp
+                   if not self._try_prefix_prefill(r, remaining)]
+            if not grp:
+                return
         bg = len(grp)
         toks = np.stack([np.asarray(r.prefill_tokens) for r in grp])
         patches = None
@@ -666,6 +746,72 @@ class ServeEngine:
             return
         rows_cache, logits = self.prefill(self._params, tj, pj)
         self._account_prefilled(grp, remaining, rows_cache, logits)
+
+    def _try_prefix_prefill(self, req, remaining) -> bool:
+        """Prefix-cache hit path.  Match the prompt's longest cached
+        prefix (full pages + a partial run into the divergence page —
+        the COW fork source), gather the matched pages' content into a
+        fresh B=1 row cache, then chunk-prefill **only the uncached
+        tail** from the divergence position — the gathered K/V are a
+        pure copy of pages an identical-prefix prefill wrote, so the
+        tail chunks (extent-invariant by the ``chunkable`` gate) emit
+        logits bit-identical to a cold prefill.  The fork is
+        copy-on-write realised through gather + fresh-page insert: the
+        source page is never written, the admitted slot's own page
+        receives the copy.  Returns True when the request took this
+        path (a chunk chain owns its accounting from then on)."""
+        toks = np.asarray(req.prefill_tokens)
+        plen = len(toks)
+        if plen < 2 or self.chunk is None:
+            return False
+        # cap at plen - 1: the last position is always recomputed (the
+        # tail chunk must produce last-token logits)
+        m = self.prefix.match_and_lock(toks, plen - 1)
+        if m.tokens == 0:
+            return False
+        try:
+            kv = self.kv
+            trow = np.full((self.pages_per_slot,), GARBAGE_PAGE, np.int32)
+            trow[:len(m.pages)] = m.pages
+            if m.fork_src is not None:
+                trow[len(m.pages)] = m.fork_src
+            # gather inputs stay locals until the sync below (the
+            # documented backend buffer-lifetime rule); the pool lock
+            # orders this dispatch before any donating decode/insert of
+            # the same cache version — FIFO device execution then runs
+            # the gather before the donating step recycles the buffers
+            trow_dev, pos_dev = jnp.array(trow), jnp.int32(m.tokens)
+            with self._pool_lock:
+                src = kv.cache
+                rows_cache = self.gather(src, trow_dev, pos_dev)
+            jax.block_until_ready(rows_cache["pos"])
+            del src, trow_dev, pos_dev
+            # fork content copied: drop its hold (the matched full
+            # pages' holds ride to admission on the request)
+            self.prefix.release_fork(m)
+            req.prefix_hold = m
+            with self._lock:
+                self.stats_prefix_hits += 1
+                self.stats_prefix_tokens_saved += m.tokens
+                if m.fork_len:
+                    self.stats_cow_forks += 1
+        except BaseException:                   # noqa: BLE001
+            self.prefix.release(m)
+            raise
+        remaining.remove(req)
+        st = {"rows_cache": rows_cache, "off": m.tokens, "c0": m.tokens,
+              "first": False, "chunks": 0,
+              "chunk": int(self.restore_chunk), "unaccounted": [req]}
+        tj = jnp.asarray(toks[None])
+        try:
+            self.rt.submit(self._prefill_chunk_task, [req], tj, None, st,
+                           name=f"serve.prefill.hit:{req.rid}@{m.tokens}")
+        except BaseException as e:              # noqa: BLE001
+            for r in st["unaccounted"]:         # chain never started
+                self._finish_failed(r, e)
+            st["unaccounted"] = []
+            raise
+        return True
 
     def _prefill_chunk_task(self, grp, tj, pj, st):
         """One bounded cache-append chunk of a chunked prefill round,
@@ -879,6 +1025,7 @@ class ServeEngine:
         """Complete a request inline; the response *write* — when a sink
         is configured — is its own UMT task so slow consumers never stall
         the decode loop."""
+        self._drop_prefix_hold(req)
         self._materialise_tokens(req)
         req.t_done = time.monotonic()
         with self._lock:
@@ -927,9 +1074,32 @@ class ServeEngine:
                     return
                 req, rows_cache, row, t0 = self._inserts[0]
             ids = None
+            shared: list[int] = []
             if self.paged:
-                ids = self.pager.reserve(
-                    self.policy.admission_tokens(self, req))
+                # a prefix hit already holds its matched pages — only
+                # the uncached remainder is allocated (never zero: at
+                # least the last prompt position was recomputed)
+                if req.prefix_hold is not None:
+                    shared = list(req.prefix_hold.pages)
+                need = self.pager.pages_for(
+                    self.policy.admission_tokens(self, req)) - len(shared)
+                ids = self._alloc_pages(need)
+                if ids is None and shared:
+                    # a blocked head must hold nothing — the
+                    # deadlock-freedom argument (a lone live slot can
+                    # always grow; every eviction strictly frees) breaks
+                    # if blocked admissions pin pages.  Dropping the
+                    # hold is always sound: the gathered row cache holds
+                    # the complete prefix content, so the admission
+                    # falls back to cold-shaped (all pages fresh) — the
+                    # prefill compute stayed saved, only page dedup is
+                    # lost.  The dropped pages revert to refcount-0
+                    # cached: this very retry's reclaim may harvest them.
+                    self._drop_prefix_hold(req)
+                    shared = []
+                    need = self.pager.pages_for(
+                        self.policy.admission_tokens(self, req))
+                    ids = self._alloc_pages(need)
                 if ids is None:         # admission blocked on free pages
                     if self._blocked_head != req.rid:
                         self._blocked_head = req.rid
@@ -947,17 +1117,27 @@ class ServeEngine:
             # refs drop at the end of this iteration: pin until a sync
             kv.pin(rows_cache, t0, row_dev, slot_dev)
             if self.paged:
-                req.pages = ids
-                table_row = kv.bind_slot_pages(s, ids)
+                req.pages = shared + ids
+                req.prefix_hold = None  # holds adopted as the slot's own
+                table_row = kv.bind_slot_pages(s, req.pages,
+                                               n_shared=len(shared))
                 kv.pin(table_row)
-                new_cache = self.insert(kv.cache, rows_cache, row_dev,
-                                        slot_dev, table_row)
+                if kv.debug_validate:
+                    for pid in ids:     # fresh pages must be private
+                        assert self.pager.refcount(pid) == 1 \
+                            and not self.pager.is_cached(pid), (
+                            f"freshly allocated page {pid} is shared")
+                with self._pool_lock:
+                    new_cache = self.insert(kv.cache, rows_cache,
+                                            row_dev, slot_dev, table_row)
+                    # donated: the displaced version was consumed by the
+                    # insert (never pinned); copied: commit pins it
+                    kv.commit(new_cache, donated=self.donate)
             else:
-                new_cache = self.insert(kv.cache, rows_cache, row_dev,
-                                        slot_dev)
-            # donated: the displaced version was consumed by the insert
-            # (never pinned); copied: commit pins it for pending readers
-            kv.commit(new_cache, donated=self.donate)
+                with self._pool_lock:
+                    new_cache = self.insert(kv.cache, rows_cache,
+                                            row_dev, slot_dev)
+                    kv.commit(new_cache, donated=self.donate)
             self._rebind_tokens(self._tokens.at[s].set(t0[row]))
             self._active[s] = True
             self._rebind_active()
@@ -966,6 +1146,18 @@ class ServeEngine:
             self._slot_pos[s] = req.total_len   # next cache write position
             self._admit_seq += 1
             self._slot_seq[s] = self._admit_seq
+            # make the admitted prompt's complete pages reusable the
+            # moment their content lands: the trie adopts every full
+            # page of the written extent (first-wins on runs an earlier
+            # admission already cached).  The insert dispatch above is
+            # ordered (pool lock + device FIFO) before any gather a
+            # concurrent matcher issues, so a hit can never read pages
+            # whose content is still in flight.
+            if self.prefix is not None and req.patches is None \
+                    and req.total_len >= self.page_size:
+                key = (req.restore_tokens
+                       if req.restore_tokens is not None else req.tokens)
+                self.prefix.insert(key, req.pages, req.total_len)
 
     def _slot_views(self) -> list:
         """Read-only live-slot snapshots for policy decisions."""
@@ -996,6 +1188,12 @@ class ServeEngine:
         self._materialise_tokens(req)
         self.kv.flush(synced=True)
         req.build_restore(self._restore_prefill)
+        # the evicted slot's written pages become reuse capital: the
+        # restore's own admission (or any same-prefix arrival) re-hits
+        # them in the trie instead of recomputing — PR 5's
+        # recompute-on-restore now recomputes only what eviction
+        # pressure actually reclaimed
+        self._prefix_insert_slot(req)
         self._release_slot(s)           # slot + pages free right now
         self.stats_evictions += 1
         with self._lock:
@@ -1003,6 +1201,38 @@ class ServeEngine:
         self.rt.submit(self._prefill_round, [req],
                        name=f"serve.restore:{req.rid}"
                             f"@{len(req.out_tokens)}")
+
+    def _alloc_pages(self, n: int):
+        """Allocate ``n`` pages, letting the policy reclaim idle
+        prefix-cache pages (refcount-0 trie leaves) to cover a shortfall
+        *before* the block is surfaced — reclaiming idle cached content
+        only costs future reuse, where the caller's fallbacks (admission
+        block, victim eviction) cost live work."""
+        if n <= 0:
+            return []
+        got = self.pager.alloc(n)
+        if got is None and self.prefix is not None:
+            deficit = n - self.pager.free_pages
+            if deficit > 0:
+                self.policy.prefix_evict(self, deficit)
+            got = self.pager.alloc(n)
+        return got
+
+    def _prefix_insert_slot(self, req: Request):
+        """Adopt a finished/evicted slot's complete pages into the trie:
+        key = prompt + generated-so-far minus the last token — exactly
+        the written cache extent, so the page containing any position a
+        restore might still write never enters.  A restored request that
+        later re-enters admission re-hits these pages."""
+        if self.prefix is None or req.patches is not None \
+                or not req.pages:
+            return
+        toks = np.asarray(req.tokens)
+        gen = req.out_tokens[:-1]
+        key = toks if not gen else np.concatenate(
+            [toks, np.asarray(gen).reshape((len(gen),) + toks.shape[1:])])
+        if len(key) >= self.page_size:
+            self.prefix.insert(key, req.pages, len(key))
 
     def _page_faults(self):
         """On-demand growth: extend a live slot's block table as its next
@@ -1027,7 +1257,7 @@ class ServeEngine:
             req = self._slot_req[s]
             while self._active[s] and \
                     len(req.pages) * ps <= self._slot_pos[s]:
-                got = self.pager.alloc(1)
+                got = self._alloc_pages(1)
                 if got is not None:
                     self.kv.grow_slot_pages(s, got, base=len(req.pages))
                     req.pages.extend(got)
@@ -1054,13 +1284,15 @@ class ServeEngine:
         """Free a slot and, when paged, its pages — immediately, so the
         very next admission can reuse them; the slot's table rows are
         re-pointed at the garbage page so the dead slot's frozen-pos
-        cache writes land nowhere."""
+        cache writes land nowhere.  ``release`` (not ``free``): a page
+        another slot shares, or the trie owns, survives this slot's
+        exit — only refcount-0 uncached pages return to the free list."""
         req = self._slot_req[s]
         self._active[s] = False
         self._slot_req[s] = None
         if self.paged and req.pages is not None:
             self.kv.release_slot_pages(s)
-            self.pager.free(req.pages)
+            self.pager.release(req.pages)
             req.pages = None
 
     def _tick(self):
@@ -1079,14 +1311,29 @@ class ServeEngine:
             self._page_faults()
         if not self._active.any():
             return                      # everything evicted: no tick
-        if self.paged:
-            new_tokens, new_cache = self.decode(
-                self._params, kv.cache, self._tokens, self._active_dev,
-                kv.table_dev)
-        else:
-            new_tokens, new_cache = self.decode(
-                self._params, kv.cache, self._tokens, self._active_dev)
-        kv.commit(new_cache, donated=self.donate)
+        if kv.debug_validate and self.prefix is not None:
+            # write-privacy invariant: the page a decode tick writes is
+            # never shared or trie-owned (only *complete* pages enter
+            # the trie; shared pages are always behind the write head)
+            for s in np.flatnonzero(self._active):
+                pid = int(kv._table[int(s),
+                                    int(self._slot_pos[s])
+                                    // self.page_size])
+                assert pid != GARBAGE_PAGE and \
+                    self.pager.refcount(pid) == 1 and \
+                    not self.pager.is_cached(pid), (
+                    f"slot {int(s)} would decode-write shared/cached "
+                    f"page {pid}")
+        with self._pool_lock:
+            if self.paged:
+                new_tokens, new_cache = self.decode(
+                    self._params, kv.cache, self._tokens,
+                    self._active_dev, kv.table_dev)
+            else:
+                new_tokens, new_cache = self.decode(
+                    self._params, kv.cache, self._tokens,
+                    self._active_dev)
+            kv.commit(new_cache, donated=self.donate)
         self._rebind_tokens(new_tokens)
         self._slot_pos[self._active] += 1   # each live slot wrote one pos
         if self.sync_ticks:
@@ -1127,6 +1374,7 @@ class ServeEngine:
                 # are freed and the block table rewritten nothing pending
                 # can still read them
                 self._finish(req)
+                self._prefix_insert_slot(req)  # pages -> reuse capital
                 self._release_slot(s)         # slot + pages freed now
                 freed = True
         if freed:
@@ -1192,6 +1440,10 @@ class ServeEngine:
             "evictions": self.stats_evictions,
             "restores": self.stats_restores,
             "pages_grown": self.stats_pages_grown,
+            "prefix_cache": self.prefix is not None,
+            "prefix_hits": self.stats_prefix_hits,
+            "prefix_tokens_saved": self.stats_prefix_tokens_saved,
+            "cow_forks": self.stats_cow_forks,
             "policy": self.policy.name,
             "donate": self.donate,
             "paged_kernel": self.paged_kernel,
@@ -1204,4 +1456,6 @@ class ServeEngine:
             "page_size": self.page_size,
         }
         out.update(self.kv.stats())     # versions, commits, pager pool
+        if self.prefix is not None:
+            out.update(self.prefix.stats())
         return out

@@ -167,16 +167,33 @@ class KVState:
         _no_deleted_leaves(self._pins, "KVState pins")
 
     # ------------------------------------------------------------ block table
-    def bind_slot_pages(self, slot: int, ids) -> jnp.ndarray:
+    def bind_slot_pages(self, slot: int, ids, *,
+                        n_shared: int = 0) -> jnp.ndarray:
         """Point ``slot``'s block table at physical pages ``ids``
         (unreserved logical pages at the garbage page), refresh the
         device mirror (pinning the displaced one), and return the
-        slot's table row as a device array for the insert step."""
+        slot's table row as a device array for the insert step.
+
+        ``n_shared`` (prefix-cache hit): the leading ``n_shared`` pages
+        of ``ids`` are *shared* prefix pages — decode and the paged
+        kernel read them through the real table, but the returned
+        **insert row points them at the garbage page**.  The batched
+        insert scatters every logical page of the prefilled row through
+        its table row, and the insert jit *donates the pool*: writing a
+        shared page in place would corrupt it for every other holder
+        (and the prefilled row holds no valid content there anyway —
+        prefill only computed the uncached tail).  This is the
+        donation-safety rule made mechanical: a donated step never
+        aliases a shared page it writes, because the write path never
+        sees a shared page id."""
         assert self.paged
+        assert 0 <= n_shared <= len(ids)
         self._table[slot, :] = GARBAGE_PAGE
         self._table[slot, :len(ids)] = ids
         self.sync_table()
-        return jnp.array(self._table[slot])
+        insert_row = self._table[slot].copy()
+        insert_row[:n_shared] = GARBAGE_PAGE
+        return jnp.array(insert_row)
 
     def grow_slot_pages(self, slot: int, ids, *, base: int) -> None:
         """On-demand growth: bind physical pages ``ids`` at the slot's

@@ -122,6 +122,21 @@ class SchedulerPolicy:
         through this without touching mechanism."""
         return None
 
+    def prefix_evict(self, eng, need_pages: int) -> int:
+        """Prefix-cache reclaim decision, consulted when the pool cannot
+        cover an allocation (admission reservation or on-demand growth)
+        before the block is surfaced — the cheaper sibling of
+        ``select_victim``: evicting idle cached pages costs only future
+        reuse, evicting a live slot costs recompute.  Returns pages
+        actually freed; the engine retries the allocation with them.
+        Default: LRU over the trie's refcount-0 leaves, exactly
+        ``need_pages`` worth.  Override to keep hot prefixes resident
+        (evict-nothing => admission blocks instead, the paper's
+        monitored block whose unblock is a later release)."""
+        if eng.prefix is None:
+            return 0
+        return eng.prefix.evict_lru(need_pages)
+
     def __repr__(self):
         return f"<{type(self).__name__} {self.name!r}>"
 

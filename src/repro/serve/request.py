@@ -52,7 +52,7 @@ class Request:
     __slots__ = ("rid", "tokens", "patches", "max_new", "out_tokens",
                  "t_submit", "t_first", "t_done", "done", "slot", "error",
                  "eos_id", "stop", "stopped", "pages", "total_len",
-                 "evictions", "resume", "restore_tokens")
+                 "evictions", "resume", "restore_tokens", "prefix_hold")
 
     def __init__(self, rid, tokens, patches=None, max_new_tokens: int = 16,
                  eos_id: int | None = None, stop=None):
@@ -78,6 +78,10 @@ class Request:
         self.evictions: int = 0          # times preempted (policy evict)
         self.resume = False              # next prefill is a restore replay
         self.restore_tokens = None       # prompt + generated[:-1], host
+        self.prefix_hold = None          # PrefixMatch carrying page holds
+        #                                  from match (prefill thread) to
+        #                                  admission, where they are
+        #                                  adopted into ``pages``
 
     @property
     def needs_host_tokens(self) -> bool:

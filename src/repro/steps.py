@@ -271,6 +271,60 @@ def make_batched_insert_step(cfg, mesh=None, *, cache_len: int,
     return insert_step
 
 
+def make_prefix_gather_step(cfg, mesh=None, *, cache_len: int,
+                            page_size: int):
+    """Materialise a batch-1 dense row cache from shared KV pages — the
+    read half of a prefix-cache hit:
+
+        (cache, table_row, pos) -> row_cache
+
+    ``cache`` is the engine's paged pool; ``table_row`` is a
+    (pages_per_slot,) physical page vector whose leading entries are the
+    matched prefix pages (plus the copy-on-write fork source) and whose
+    tail points at garbage page 0; ``pos`` (traced — one jit total) is
+    the number of valid prefix tokens.  Positions past ``pos`` gather
+    garbage-page content, which the chunked tail prefill overwrites or
+    the position mask excludes — the same convention every paged read
+    already relies on.  The gathered row then seeds
+    :func:`make_prefill_chunk_step` at offset ``pos``: the prefix K/V
+    are bit-identical to what the skipped chunks would have computed
+    (they are a pure copy of pages an earlier identical-prefix prefill
+    wrote), so the tail chunks — extent-invariant by the ``chunkable``
+    gate — produce logits bit-identical to a cold prefill.
+
+    Donation: the pool argument must **not** be donated — this is a pure
+    read; the engine's live cache stays the single owner.  The output
+    row is fresh and feeds the chunk chain as its first donated version.
+    """
+    assert cache_len % page_size == 0
+    assert chunkable(cfg, cache_len), (
+        f"{cfg.name}: prefix-cache gather rides the chunked-prefill "
+        "machinery — non-chunkable configs bypass the prefix cache")
+    pps = cache_len // page_size
+    meta = cache_meta(cfg, 1, cache_len)
+
+    def gather_step(cache, table_row, pos):
+        with sharding_ctx(mesh, DECODE_RULES):
+            blocks = []
+            for spec, cb, bm in zip(cfg.pattern, cache["blocks"],
+                                    meta["blocks"]):
+                paged = paged_names(spec, cache_len)
+                # the chunkable gate guarantees every leaf pages — a
+                # bounded (ring/state) leaf here would need real content
+                # this pool does not hold
+                assert set(cb) == paged, (spec, set(cb), paged)
+                leaves = {}
+                for name, c in cb.items():
+                    g = c[:, table_row]  # (n_rep, pps, page_size, *tail)
+                    leaves[name] = g.reshape(
+                        (c.shape[0], 1, pps * page_size) + c.shape[3:])
+                blocks.append(leaves)
+            return {"pos": jnp.asarray(pos, jnp.int32),
+                    "blocks": tuple(blocks)}
+
+    return gather_step
+
+
 def make_decode_step(cfg, mesh=None, *, cache_len: int | None = None,
                      page_size: int | None = None,
                      paged_kernel: bool = False):
@@ -374,6 +428,7 @@ def make_prefill_chunk_step(cfg, mesh=None, cache_len: int | None = None):
 __all__ = ["init_train_state", "make_train_step", "make_prefill_step",
            "make_serve_step", "make_insert_step", "make_decode_step",
            "make_batched_insert_step", "make_prefill_chunk_step",
+           "make_prefix_gather_step",
            "init_slot_cache", "init_paged_slot_cache", "paged_names",
            "chunkable", "greedy_oneshot", "cast_tree", "init_cache",
            "OptHParams"]

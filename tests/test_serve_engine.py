@@ -152,7 +152,10 @@ def test_engine_matches_oneshot_under_random_arrivals(built, seed, umt):
     assert 0.0 < stats["occupancy"] <= 1.0
     assert stats["p50_latency_s"] <= stats["p99_latency_s"]
     assert stats["prefill_reqs"] == N_REQ
-    assert pager.used_pages == 0        # every page returned
+    # drained: no slot holds a ref; only trie-cached (refcount-0,
+    # reclaimable) pages may remain allocated — idle reuse capital
+    assert pager.live_refs == 0
+    assert pager.used_pages == pager.cached_pages
 
 
 @pytest.mark.slow
@@ -183,7 +186,8 @@ def test_engine_fuzz_pool_and_chunk_schedules(built, seed):
             f"chunk {chunk})")
     if chunk:
         assert stats["prefill_chunks"] > 0
-    assert pager.used_pages == 0
+    assert pager.live_refs == 0
+    assert pager.used_pages == pager.cached_pages
     assert stats["pages_used_peak"] <= pager.capacity
 
 
@@ -202,7 +206,8 @@ def test_pool_exhaustion_serialises_but_never_corrupts(built):
                               b["ref"][r.rid])
     assert stats["max_live_slots"] == 1
     assert pager.alloc_failures > 0
-    assert pager.used_pages == 0
+    assert pager.live_refs == 0
+    assert pager.used_pages == pager.cached_pages
     # the policy-mechanism counters: each distinct blocked head counts
     # once, and the default worst-case policy never faults or preempts
     assert stats["admission_blocks"] > 0
@@ -241,9 +246,10 @@ def test_eos_and_stop_sequences_evict_eagerly(built):
             eng.submit(r)
             r.wait(timeout=60)
             assert r.done.is_set()
-            # eager eviction: pages are back the moment the request is
-            # done, while the engine is still up and idling
-            assert eng.pager.used_pages == 0
+            # eager release: no slot holds a ref the moment the request
+            # is done, while the engine is still up and idling (pages
+            # the prefix trie cached stay allocated but reclaimable)
+            assert eng.pager.live_refs == 0
         eng.close()
         eng.join()
         stats = eng.stats()
@@ -317,7 +323,8 @@ def test_oversized_request_fails_loudly(built):
         bad.wait()
     assert np.array_equal(np.asarray(good.wait(), np.int32),
                           b["ref"][1, :2])
-    assert pager.used_pages == 0
+    assert pager.live_refs == 0
+    assert pager.used_pages == pager.cached_pages
 
 
 @pytest.mark.slow

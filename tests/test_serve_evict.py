@@ -7,7 +7,12 @@
 * the donation/pinning invariant holds under evict (no pinned leaf is a
   donated husk, and no freed page is read by a pending dispatch);
 * on-demand allocation never deadlocks while the policy can always name
-  one evictable victim (severe-pressure drain test with a watchdog).
+  one evictable victim (severe-pressure drain test with a watchdog);
+* shared-prefix KV reuse serves bit-exact: a warm trie turns admissions
+  into prefix hits (gather + tail chunks over shared pages) whose greedy
+  tokens equal the cold one-shot run across the arch and donation x
+  paged-kernel grids, an evicted slot's pages are re-hit by its own
+  restore, and the page_size=1 degenerate trie still saves the prefix.
 
 Policy-decision unit tests (no jit) ride along, inner-loop fast."""
 import numpy as np
@@ -137,7 +142,10 @@ def _run(b, policy, *, num_pages=None, jit_steps=None, page_size="use",
         if not r.stopped:
             assert len(got) == r.max_new
     if pager is not None:
-        assert pager.used_pages == 0, "pages leaked across evictions"
+        assert pager.live_refs == 0, "page refs leaked across evictions"
+        assert pager.used_pages == pager.cached_pages, (
+            "pages leaked across evictions (allocated but neither held "
+            "nor trie-cached)")
     return stats
 
 
@@ -260,6 +268,149 @@ def test_restore_retraces_bounded(built):
     assert steps["chunk"]._cache_size() <= (c + 1) * n_buckets, (
         "chunk-step traces exceeded the geometry bound — restore "
         "routing is leaking per-depth shapes")
+
+
+# ------------------------------------------- prefix-cache rows (slow)
+N_SHARED = 6          # shared system-prompt tokens (3 full pages, ps=2)
+
+
+def _shared_prefix_data(b):
+    """The standard prompt set rewritten so every request shares its
+    first ``N_SHARED`` tokens with request 0 (a common system prompt),
+    plus the matching one-shot reference rows."""
+    if "shared" not in b:
+        prompts = np.array(b["prompts"], copy=True)
+        prompts[1:, :N_SHARED] = prompts[0, :N_SHARED]
+        serve_step = jax.jit(make_serve_step(b["cfg"]))
+        patches = (None if b["patches"] is None
+                   else jnp.asarray(b["patches"]))
+        ref = np.asarray(greedy_oneshot(
+            b["steps"]["prefill"], serve_step, b["params"],
+            jnp.asarray(prompts), patches, GEN))
+        b["shared"] = (prompts, ref)
+    return b["shared"]
+
+
+def _run_prefix(b, *, policy=None, num_pages=None, jit_steps=None,
+                page_size="use", slots=3, prefix_cache="auto"):
+    """Drive one engine over the shared-prefix request set, request 0
+    serialized to completion first so its pages warm the trie before
+    the rest arrive.  Asserts every stream equals its one-shot row and
+    the drained pool holds nothing but trie capital."""
+    prompts, ref = _shared_prefix_data(b)
+    steps = b["steps"] if jit_steps is None else jit_steps
+    ps = b["ps"] if page_size == "use" else page_size
+    reqs = [Request(i, prompts[i],
+                    patches=None if b["patches"] is None
+                    else b["patches"][i],
+                    max_new_tokens=GEN)
+            for i in range(N_REQ)]
+    eng = ServeEngine(b["cfg"], b["params"], slots=slots,
+                      cache_len=b["cache_len"], umt=True, n_cores=4,
+                      jit_steps=steps, page_size=ps, num_pages=num_pages,
+                      policy=policy, prefix_cache=prefix_cache)
+    eng.kv.debug_validate = True
+    if eng.pager is not None:
+        eng.pager.debug_validate = True
+    eng.start()
+    eng.submit(reqs[0])
+    reqs[0].wait(timeout=120)
+    assert reqs[0].done.is_set(), "warm-up request did not finish"
+    for r in reqs[1:]:
+        eng.submit(r)
+    eng.close()
+    eng.join()
+    stats = eng.stats()
+    eng.kv.assert_no_deleted_pins()
+    pager = eng.pager
+    eng.shutdown()
+    for r in reqs:
+        got = np.asarray(r.wait(), np.int32)
+        want = ref[r.rid, :len(got)]
+        assert np.array_equal(got, want), (
+            f"request {r.rid}: prefix-cache serving diverged from the "
+            f"cold one-shot run\n got {got}\nwant {want}")
+    assert pager.live_refs == 0, "prefix/page holds leaked"
+    assert pager.used_pages == pager.cached_pages, (
+        "pages leaked (allocated but neither held nor trie-cached)")
+    return stats
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefix_hit_bit_exact_across_archs(arch, built):
+    """Hit-path prefill (gather + tail chunks over shared pages) emits
+    greedy tokens bit-identical to the cold one-shot run on every
+    frontend; configs outside the chunk-exactness gate (and vision
+    groups, whose patches make the prompt an incomplete key) bypass
+    the prefix cache transparently and still serve exactly."""
+    b = _build(arch, built)
+    stats = _run_prefix(b)
+    if b["patches"] is not None:
+        assert stats["prefix_hits"] == 0     # vision groups skip the trie
+    elif stats["prefix_cache"]:
+        assert stats["prefix_hits"] >= 1, "shared prompts never hit"
+        assert stats["prefix_tokens_saved"] > 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("donate,kernel", [(True, False), (False, False),
+                                           (True, True), (False, True)])
+def test_prefix_hit_grid_donation_paged_kernel(donate, kernel, built):
+    """Shared pages read identically through the gather+dense decode
+    and the fused paged-attention kernel, donation on x off — the
+    garbage-masked insert and COW fork keep donated writes off shared
+    pages on every leg."""
+    b = _build("qwen2.5-14b", built)
+    steps = make_jit_steps(b["cfg"], cache_len=b["cache_len"],
+                           page_size=b["ps"], donate=donate,
+                           paged_kernel=kernel)
+    stats = _run_prefix(b, jit_steps=steps)
+    assert stats["prefix_hits"] >= 1
+    assert stats["prefix_tokens_saved"] > 0
+    assert stats["donate"] is donate
+    assert stats["paged_kernel"] is kernel
+
+
+@pytest.mark.slow
+def test_prefix_restore_rehits_trie(built):
+    """An evicted slot's pages become trie capital: with *unique*
+    prompts the only possible hit is a restore re-matching the pages
+    its own eviction donated, so forced fuzz evictions must re-hit on
+    every restore instead of replaying prefill cold."""
+    b = _build("qwen2.5-14b", built)
+    stats = _run(b, OnDemandFuzzEvict(seed=11))
+    assert stats["restores"] > 0
+    assert stats["prefix_hits"] >= stats["restores"], (
+        "restore replayed prefill cold instead of re-hitting the trie")
+    assert stats["prefix_tokens_saved"] > 0
+
+
+@pytest.mark.slow
+def test_prefix_page_size_one_degenerate(built):
+    """page_size=1 (every token its own page): the trie degenerates to
+    one node per token and a divergence page is always whole, so COW
+    never fires — hits still save the full shared prefix, bit-exact."""
+    b = _build("qwen2.5-14b", built)
+    steps = make_jit_steps(b["cfg"], cache_len=b["cache_len"],
+                           page_size=1)
+    stats = _run_prefix(b, jit_steps=steps, page_size=1)
+    assert stats["page_size"] == 1
+    assert stats["prefix_hits"] >= 1
+    assert stats["prefix_tokens_saved"] >= N_SHARED
+    assert stats["cow_forks"] == 0
+
+
+@pytest.mark.slow
+def test_prefix_off_leg_serves_cold(built):
+    """``prefix_cache="off"`` is the A/B leg: same engine, no trie, no
+    shares — the shared-prompt set still serves bit-exact (asserted in
+    the harness) and the drained pool caches nothing."""
+    b = _build("qwen2.5-14b", built)
+    stats = _run_prefix(b, prefix_cache="off")
+    assert stats["prefix_cache"] is False
+    assert stats["prefix_hits"] == 0
+    assert stats["prefix_tokens_saved"] == 0
 
 
 @pytest.mark.slow

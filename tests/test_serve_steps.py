@@ -582,3 +582,63 @@ def test_chunked_prefill_rows_match_oneshot_prefill(arch, built):
             outs.append(toks)
         got = np.asarray(jnp.concatenate(outs, axis=1))
         assert np.array_equal(got, ref), f"chunk={chunk}"
+
+
+# ------------------------------------------------- prefix-cache gather step
+@pytest.mark.parametrize("arch",
+                         ["qwen2.5-14b", "minicpm3-4b", "musicgen-large"])
+@pytest.mark.parametrize("m_tokens", [PAGE_SIZE, PAGE_SIZE + 1])
+def test_prefix_gather_plus_tail_chunk_matches_cold_prefill(arch, m_tokens,
+                                                            built):
+    """The prefix-cache hit path at the step level: insert a cold
+    prefill's pages into the paged pool, gather the matched prefix back
+    into a fresh B=1 row cache (full pages, and — at a mid-page offset —
+    the copy-on-write fork page), chunk-prefill only the tail, and the
+    resulting row must emit the cold row's greedy stream bit-for-bit."""
+    from repro.steps import make_prefix_gather_step
+
+    b = _build(arch, built)
+    cfg = b["cfg"]
+    ref = _oneshot_reference(b)
+    cache_len, ps = b["cache_len"], PAGE_SIZE
+    pps = cache_len // ps
+    num_pages = SLOTS * pps + 1
+
+    # cold leg: prefill row 0 one-shot, insert into the paged pool
+    pager = PagePool(num_pages, ps)
+    pool = init_paged_slot_cache(cfg, SLOTS, cache_len,
+                                 jnp.dtype(cfg.dtype), ps, num_pages)
+    rc, t0 = _row_prefill(b, 0)
+    ids = pager.alloc(pager.pages_for(PLEN))
+    trow_full = np.zeros((pps,), np.int32)
+    trow_full[:len(ids)] = ids
+    pool = b["insert_paged"](pool, rc, jnp.int32(0), jnp.int32(0),
+                            jnp.array(trow_full))
+
+    # warm leg: gather the "matched" prefix (m_tokens of it — the page
+    # holding token m_tokens is the fork source when mid-page), then
+    # chunk-prefill the tail [m_tokens, PLEN)
+    gather = jax.jit(make_prefix_gather_step(cfg, cache_len=cache_len,
+                                             page_size=ps))
+    n_gather = -(-m_tokens // ps)               # full pages + fork page
+    trow = np.zeros((pps,), np.int32)
+    trow[:n_gather] = ids[:n_gather]
+    rows = gather(pool, jnp.array(trow), jnp.int32(m_tokens))
+    assert int(rows["pos"]) == m_tokens
+    tail = b["prompts"][0:1, m_tokens:]
+    rows, logits = b["chunk"](b["params"], rows, tail,
+                              jnp.int32(m_tokens), None,
+                              attn_extent=cache_len, want_logits=True)
+    t_warm = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    assert np.array_equal(np.asarray(t_warm), np.asarray(t0)), (
+        "warm prefill token != cold prefill token")
+
+    # both rows must decode identically from here
+    tok, cache = t_warm, rows
+    outs = [np.asarray(tok)]
+    for _ in range(GEN - 1):
+        tok, cache = b["serve"](b["params"], cache, tok)
+        outs.append(np.asarray(tok))
+    got = np.concatenate(outs, axis=1)[0]
+    assert np.array_equal(got, ref[0]), (
+        f"warm stream diverged (m_tokens={m_tokens})")
