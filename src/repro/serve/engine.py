@@ -983,16 +983,28 @@ class ServeEngine:
         return cache, nxts[-1]
 
     @staticmethod
-    def _hit_stop(req: Request) -> bool:
+    def _hit_stop(req: Request, n_new: int = 1) -> bool:
         """Early-stop check on the host-visible emitted stream (only ever
         called for ``needs_host_tokens`` requests, whose ``out_tokens``
-        are plain ints)."""
-        if req.eos_id is not None and req.out_tokens[-1] == req.eos_id:
-            return True
-        if req.stop:
-            out = req.out_tokens
-            for s in req.stop:
-                if len(out) >= len(s) and out[-len(s):] == s:
+        are plain ints).
+
+        ``n_new`` is how many tokens the caller just committed.  A
+        multi-token commit (speculative-decode acceptance) can bury an
+        EOS or a completed stop sequence *inside* the committed window,
+        so every newly committed position is checked in order — not just
+        the tail — and ``out_tokens`` is truncated at the first match so
+        the emitted stream stays exactly the prefix the one-shot
+        tick-by-tick run would have produced.  A stop sequence may
+        *start* before the window (earlier tokens already emitted) as
+        long as it *ends* on a new position."""
+        out = req.out_tokens
+        for i in range(len(out) - n_new, len(out)):
+            if req.eos_id is not None and out[i] == req.eos_id:
+                del out[i + 1:]
+                return True
+            for s in req.stop or ():
+                if i + 1 >= len(s) and out[i + 1 - len(s):i + 1] == s:
+                    del out[i + 1:]
                     return True
         return False
 

@@ -72,6 +72,44 @@ def test_request_stop_fields_validation():
         Request(2, None, stop=[[]])
 
 
+# ------------------------------------------- multi-token stop scan (fast)
+def test_hit_stop_scans_full_committed_window():
+    """Regression: a >1-token commit (speculative-decode acceptance) can
+    bury the EOS or a completed stop sequence *inside* the committed
+    window.  `_hit_stop` must scan every newly committed position — not
+    just the tail — and truncate `out_tokens` at the first match so the
+    emitted stream stays a prefix of the tick-by-tick one."""
+    from repro.serve import ServeEngine
+
+    # EOS mid-window: tail check alone would sail past it
+    r = Request(0, None, eos_id=7)
+    r.out_tokens = [3, 7, 9, 4]          # one 4-token commit, EOS at [1]
+    assert ServeEngine._hit_stop(r, n_new=4)
+    assert r.out_tokens == [3, 7]        # truncated at first match
+
+    # stop sequence completing mid-window, starting *before* the window
+    r = Request(1, None, stop=[[5, 6]])
+    r.out_tokens = [1, 5]                # committed on earlier ticks
+    assert not ServeEngine._hit_stop(r, n_new=1)
+    r.out_tokens += [6, 2, 8]            # 3-token commit; [5,6] ends at [2]
+    assert ServeEngine._hit_stop(r, n_new=3)
+    assert r.out_tokens == [1, 5, 6]
+
+    # earliest of several matches wins (eos and stop both inside window)
+    r = Request(2, None, eos_id=9, stop=[[4, 4]])
+    r.out_tokens = [4, 4, 9, 1]
+    assert ServeEngine._hit_stop(r, n_new=4)
+    assert r.out_tokens == [4, 4]
+
+    # single-token commits keep the old semantics exactly
+    r = Request(3, None, eos_id=7)
+    r.out_tokens = [7, 1, 2]             # stale eos outside the window
+    assert not ServeEngine._hit_stop(r, n_new=1)
+    r.out_tokens.append(7)
+    assert ServeEngine._hit_stop(r, n_new=1)
+    assert r.out_tokens == [7, 1, 2, 7]
+
+
 # ------------------------------------------------- engine equivalence (slow)
 N_REQ, PLEN, GEN_MAX = 8, 8, 6
 CACHE_LEN = PLEN + GEN_MAX              # 14 -> auto page_size 7
