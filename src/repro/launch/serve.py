@@ -93,7 +93,9 @@ def serve_engine(cfg, params, mesh, args):
                      donate=not args.no_donate,
                      paged_kernel=args.paged_kernel,
                      policy=args.policy,
-                     prefix_cache=args.prefix_cache) as eng:
+                     prefix_cache=args.prefix_cache,
+                     spec=None if args.spec == "off" else args.spec,
+                     spec_k=args.spec_k) as eng:
         reqs = []
         for i in range(args.requests):
             reqs.append(Request(
@@ -132,6 +134,13 @@ def serve_engine(cfg, params, mesh, args):
         "pages_cached": stats.get("pages_cached"),
         "prefill_calls": stats["prefill_calls"],
         "prefill_chunks": stats["prefill_chunks"],
+        "spec": stats["spec"],
+        "spec_drafted": stats["spec_drafted"],
+        "spec_accepted": stats["spec_accepted"],
+        "spec_rollbacks": stats["spec_rollbacks"],
+        "spec_accept_rate": round(stats["spec_accept_rate"], 3),
+        "decode_dispatches": stats["decode_dispatches"],
+        "dispatches_per_token": round(stats["dispatches_per_token"], 4),
         "wall_s": round(wall, 3),
         "tokens_s": round(stats["tokens_out"] / wall, 1),
         "occupancy": round(stats["occupancy"], 3),
@@ -183,6 +192,18 @@ def serve(argv=None):
                     help="engine: scheduler policy — worst-case page "
                          "reservation at admission, or on-demand paging "
                          "with preemption-by-eviction (paged only)")
+    ap.add_argument("--spec", choices=("off", "ngram"), default="off",
+                    help="engine: speculative decoding — draft k tokens "
+                         "per slot (n-gram prompt lookup, no second "
+                         "model) and verify them in one batched "
+                         "dispatch; greedy tokens are bit-identical to "
+                         "--spec off by construction, only "
+                         "dispatches-per-token changes (see "
+                         "spec_drafted/spec_accepted/spec_rollbacks in "
+                         "the stats line)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="engine: draft window length per slot per tick "
+                         "(speculation depth; --spec only)")
     ap.add_argument("--prefix-cache", choices=("auto", "on", "off"),
                     default="auto",
                     help="engine: shared-prefix KV reuse (radix cache "

@@ -19,7 +19,8 @@ import jax.numpy as jnp
 
 from ..kernels import paged_decode_attention, paged_mla_decode_attention
 from ..sharding import shard
-from .layers import apply_rope, page_gather, page_scatter, rms_norm
+from .layers import (apply_rope, page_gather, page_scatter,
+                     page_scatter_window, rms_norm)
 
 NEG_INF = -1e30
 
@@ -176,6 +177,42 @@ def decode_attention(q, k_cache, v_cache, pos, *, window=None, scale=None):
     return out / jnp.swapaxes(l, 1, 2).astype(q.dtype)   # (B,1,H,1)
 
 
+def verify_attention(q, k_cache, v_cache, pos, *, scale=None):
+    """Speculative-decode verify: q: (B,S,H,Dh) — S window lanes per slot,
+    lane j at position ``pos_b + j``; caches: (B,Sc,Hkv,Dh) already holding
+    the window's K/V.  Linear caches only (the speculatable gate excludes
+    true SWA rings).
+
+    Deliberately the *same formulation* as :func:`decode_attention` — the
+    identical einsum contractions and the identical partial-softmax
+    (max/exp/sum over the sharded sequence dim, divide at the end) — just
+    with a per-lane causal mask instead of a per-slot one.  At S == 1 the
+    two lowerings compute the same reductions over the same extents, so a
+    verify step with no drafted tokens IS the decode tick bit-for-bit;
+    that is the base of the spec-decode bit-identity argument (the
+    inductive step is seq-extent invariance, the chunked-prefill
+    property)."""
+    b, s, h, dh = q.shape
+    sc = k_cache.shape[1]
+    kf = shard(_expand_kv(k_cache, h), "batch", "seq_shard", None, None)
+    vf = shard(_expand_kv(v_cache, h), "batch", "seq_shard", None, None)
+    qp = pos[:, None] + jnp.arange(s)                      # (B,S)
+    valid = jnp.arange(sc)[None, None, :] <= qp[:, :, None]  # (B,S,T)
+    bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)[:, None]
+    scale = (dh ** -0.5) if scale is None else scale
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kf).astype(jnp.float32)
+    scores = scores * scale + bias
+    if _BASELINE:
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+    scores = shard(scores, "batch", None, None, "seq_shard")
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(q.dtype), vf)
+    return out / jnp.swapaxes(l, 1, 2).astype(q.dtype)     # (B,S,H,1)
+
+
 # ====================================================================== GQA
 def gqa_param_shapes(cfg):
     """Weights are stored FLAT — (d, H*dh) — so pjit argument shardings
@@ -224,6 +261,18 @@ def _cache_update(c, u, idx):
     return c.at[jnp.arange(c.shape[0]), idx].set(u[:, 0].astype(c.dtype))
 
 
+def _cache_update_window(c, u, pos, n_tok):
+    """Dense-cache counterpart of :func:`page_scatter_window`: write the
+    verify window ``u`` (B,S,...) into cache ``c`` (B,Sc,...) at per-slot
+    positions ``pos_b + j`` for lanes ``j < n_tok_b``.  Masked lanes are
+    redirected past the cache extent, where JAX's default scatter OOB
+    mode drops them — padding never lands."""
+    b, s = u.shape[:2]
+    idx = pos[:, None] + jnp.arange(s)                     # (B,S)
+    idx = jnp.where(jnp.arange(s)[None, :] < n_tok[:, None], idx, c.shape[1])
+    return c.at[jnp.arange(b)[:, None], idx].set(u.astype(c.dtype))
+
+
 def _pad_seq(t, target):
     """Right-pad dim 1 (sequence) with zeros up to `target` slots."""
     if target is None or t.shape[1] >= target:
@@ -234,7 +283,7 @@ def _pad_seq(t, target):
 
 
 def gqa_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None,
-              pages=None, attn_extent=None):
+              pages=None, attn_extent=None, n_tok=None):
     """x: (B,S,D) -> (out, new_cache or None). cache: {"k","v"} unexpanded.
 
     With ``pages`` (decode only) the linear K/V leaves are paged pools
@@ -296,6 +345,35 @@ def gqa_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None,
             kc = shard(kc, "batch", "seq_shard", None, None)
             vc = shard(vc, "batch", "seq_shard", None, None)
             out = decode_attention(q, kc, vc, pos, window=w)
+        new_cache = {"k": kc, "v": vc}
+    elif mode == "verify":
+        # speculative-decode verify window: S lanes per slot at positions
+        # pos_b + j, lanes >= n_tok_b masked (padding / dead slots).  The
+        # speculatable gate guarantees a linear cache (window is None or
+        # the degenerate ring), so logical index == position.  Paged
+        # attention always takes the gather path here — the fused kernel
+        # is a single-query decode specialisation and stays off the
+        # verify leg (the gather path is its token-equality oracle).
+        qp = pos[:, None] + jnp.arange(s)                  # (B,S)
+        if cfg.pos_emb == "rope":
+            q = apply_rope(q, qp, cfg.rope_theta)
+            k = apply_rope(k, qp, cfg.rope_theta)
+        kc, vc = cache["k"], cache["v"]
+        if paged_leaf(pages, spec.window):
+            table, ps = pages["table"], pages["page_size"]
+            kc = page_scatter_window(kc, table, ps, pos, k, n_tok)
+            vc = page_scatter_window(vc, table, ps, pos, v, n_tok)
+            kd = shard(page_gather(kc, table, ps),
+                       "batch", "seq_shard", None, None)
+            vd = shard(page_gather(vc, table, ps),
+                       "batch", "seq_shard", None, None)
+            out = verify_attention(q, kd, vd, pos)
+        else:
+            kc = _cache_update_window(kc, k, pos, n_tok)
+            vc = _cache_update_window(vc, v, pos, n_tok)
+            kc = shard(kc, "batch", "seq_shard", None, None)
+            vc = shard(vc, "batch", "seq_shard", None, None)
+            out = verify_attention(q, kc, vc, pos)
         new_cache = {"k": kc, "v": vc}
     else:
         q = shard(q, "batch", "seq", "heads", "head_dim")
@@ -388,7 +466,7 @@ def _mla_q(xn, p, cfg, dt):
 
 
 def mla_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None,
-              pages=None, attn_extent=None):
+              pages=None, attn_extent=None, n_tok=None):
     b, s, _ = x.shape
     h = cfg.n_heads
     rkv, dn, dr, dv = (cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim,
@@ -447,6 +525,44 @@ def mla_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None,
                                else mb[None, None, None, :])
             probs = jax.nn.softmax(scores, axis=-1).astype(dt)
             lat = jnp.einsum("bhst,btr->bshr", probs, cd)      # (B,1,H,rkv)
+        out = jnp.einsum("bshr,rhv->bshv", lat,
+                         p["wv_b"].astype(dt).reshape(rkv, h, dv))
+        new_cache = {"ckv": cc, "krope": kr}
+    elif mode == "verify":
+        # speculative-decode verify: the ABSORBED decode form generalised
+        # to S window lanes (NOT the non-absorbed chunk form — bit-identity
+        # with tick-by-tick decode demands the same latent-space math the
+        # decode tick runs).  The score einsums are unchanged: "bshr" was
+        # already S-capable; only the mask gains a per-lane axis.
+        qp = pos[:, None] + jnp.arange(s)                  # (B,S)
+        q_rope = apply_rope(q_rope, qp, cfg.rope_theta)
+        k_rope = apply_rope(k_rope[:, :, None, :], qp,
+                            cfg.rope_theta)[:, :, 0, :]
+        cc, kr = cache["ckv"], cache["krope"]
+        if paged_leaf(pages, None):
+            table, ps = pages["table"], pages["page_size"]
+            cc = page_scatter_window(cc, table, ps, pos, ckv, n_tok)
+            kr = page_scatter_window(kr, table, ps, pos, k_rope, n_tok)
+            cd = shard(page_gather(cc, table, ps), "batch", "seq_shard",
+                       None)
+            kd = shard(page_gather(kr, table, ps), "batch", "seq_shard",
+                       None)
+        else:
+            cc = _cache_update_window(cc, ckv, pos, n_tok)
+            kr = _cache_update_window(kr, k_rope, pos, n_tok)
+            cc = shard(cc, "batch", "seq_shard", None)
+            kr = shard(kr, "batch", "seq_shard", None)
+            cd, kd = cc, kr
+        wk_b = p["wk_b"].astype(dt).reshape(rkv, h, dn)
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, wk_b)  # (B,S,H,rkv)
+        scores = (jnp.einsum("bshr,btr->bhst", q_lat, cd) +
+                  jnp.einsum("bshr,btr->bhst", q_rope, kd))
+        scores = scores.astype(jnp.float32) * scale
+        valid = jnp.arange(cd.shape[1])[None, None, :] <= qp[:, :, None]
+        mb = jnp.where(valid, 0.0, NEG_INF)                # (B,S,T)
+        scores = scores + mb[:, None]                      # (B,1,S,T)
+        probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+        lat = jnp.einsum("bhst,btr->bshr", probs, cd)      # (B,S,H,rkv)
         out = jnp.einsum("bshr,rhv->bshv", lat,
                          p["wv_b"].astype(dt).reshape(rkv, h, dv))
         new_cache = {"ckv": cc, "krope": kr}

@@ -45,15 +45,21 @@ def block_cache_shapes(cfg, spec, batch, seq):
 
 
 def block_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None,
-                pages=None, attn_extent=None):
+                pages=None, attn_extent=None, n_tok=None):
     """Returns (x, new_cache, aux_loss).  ``pages`` is the paged-KV
     descriptor threaded verbatim to the mixer (see repro.models.lm.forward
-    — its ``"kernel"`` key selects the fused paged-attention decode)."""
+    — its ``"kernel"`` key selects the fused paged-attention decode).
+    ``n_tok`` (verify mode only) is the per-slot valid window length; it
+    is passed through conditionally so mixers that never see verify mode
+    (SSM — excluded by the speculatable gate) keep their signature."""
     _, _, apply_fn = _mixer(spec)
+    kw = {}
+    if n_tok is not None:
+        kw["n_tok"] = n_tok
     out, new_cache = apply_fn(x, p["mixer"], cfg, spec, mode=mode, pos=pos,
                               cache=cache, cache_len=cache_len, pages=pages,
-                              attn_extent=attn_extent)
-    if mode in ("decode", "prefill_chunk"):
+                              attn_extent=attn_extent, **kw)
+    if mode in ("decode", "prefill_chunk", "verify"):
         # donation contract: cache-updating modes keep every leaf's
         # shape/dtype, so the serve jits can alias donated buffers
         check_cache_invariant(cache, new_cache, f"{spec.kind}/{spec.attn}")

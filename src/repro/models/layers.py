@@ -77,6 +77,30 @@ def page_scatter(pool, table, page_size, idx, update):
         update[:, 0].astype(pool.dtype))
 
 
+def page_scatter_window(pool, table, page_size, pos, update, n_tok):
+    """Write a per-slot multi-token window into the paged pool (the
+    speculative-decode verify append).
+
+    pos: (B,) first logical position per slot; update: (B, S, ...) the
+    verify window's values; n_tok: (B,) valid window lengths (0 for dead
+    slots).  Lane j of slot b lands at logical position ``pos_b + j``
+    when ``j < n_tok_b``; masked lanes — padding past a short draft, and
+    every lane of a dead slot — are redirected to garbage page 0 (the
+    same convention dead slots already use in :func:`page_scatter`), so
+    a padded write can never touch a live page.  Valid lanes of
+    distinct slots never collide: each slot owns its pages."""
+    b, s = update.shape[:2]
+    idx = pos[:, None] + jnp.arange(s)                        # (B, S)
+    valid = jnp.arange(s)[None, :] < n_tok[:, None]           # (B, S)
+    # clip protects masked lanes whose logical page would run off the
+    # table; valid lanes are always covered (the engine grows/reserves
+    # pages through pos + n_tok - 1 before dispatch)
+    lp = jnp.clip(idx // page_size, 0, table.shape[1] - 1)
+    page = jnp.where(valid, jnp.take_along_axis(table, lp, axis=1), 0)
+    off = jnp.where(valid, idx % page_size, 0)
+    return pool.at[page, off].set(update.astype(pool.dtype))
+
+
 # ----------------------------------------------------------------- positions
 def rope_freqs(dim: int, theta: float):
     return 1.0 / (theta ** (np.arange(0, dim, 2, dtype=np.float32) / dim))

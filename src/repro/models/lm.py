@@ -133,7 +133,7 @@ def init_cache(cfg, batch: int, seq: int, dtype):
 # ---------------------------------------------------------------- forward
 def forward(params, cfg, tokens, *, mode="train", pos=0, cache=None,
             patches=None, cache_len=None, pages=None, attn_extent=None,
-            want_logits=True):
+            want_logits=True, n_tok=None):
     """tokens: (B,S[,K]) int32. Returns {"logits","cache","aux"}.
 
     mode: "train" (full logits) | "prefill" (cache + last logits) |
@@ -141,7 +141,14 @@ def forward(params, cfg, tokens, *, mode="train", pos=0, cache=None,
     of per-slot positions for continuous batching, where every batch row
     decodes at its own depth) | "prefill_chunk" (cache-append prefill
     continuation: S chunk tokens written at [pos, pos+S) of an existing
-    dense prefill cache — last-position logits, like "prefill").
+    dense prefill cache — last-position logits, like "prefill") |
+    "verify" (speculative decode: S window lanes per slot appended at
+    per-slot positions ``pos`` (B,), lane validity masked by ``n_tok``
+    (B,); logits for ALL S positions come back so the engine can accept
+    the longest agreeing draft prefix — at S == 1 this is the decode
+    tick's computation exactly).  The cache ``pos`` leaf is returned
+    unchanged in verify mode: the engine owns acceptance, so position
+    bookkeeping is host-authoritative there.
 
     pages: optional paged-KV descriptor for decode —
     ``{"table": (B, pages_per_slot) int32, "page_size": int,
@@ -176,7 +183,12 @@ def forward(params, cfg, tokens, *, mode="train", pos=0, cache=None,
         # chunk only (later chunks continue at pos past the patches)
         x = jnp.concatenate([patches.astype(dt), x], axis=1)
     b, s, _ = x.shape
-    positions = pos + jnp.arange(s) if mode != "decode" else pos
+    if mode == "decode":
+        positions = pos
+    elif mode == "verify":
+        positions = pos[:, None] + jnp.arange(s)        # (B,S) per-slot
+    else:
+        positions = pos + jnp.arange(s)
     if cfg.pos_emb == "sinusoidal":
         pp = jnp.asarray(positions)
         # per-slot decode positions (B,) -> (B, 1) so the embedding
@@ -187,7 +199,7 @@ def forward(params, cfg, tokens, *, mode="train", pos=0, cache=None,
     x = shard(x, "batch", "seq", "embed")
 
     with_cache = mode != "train"
-    cache_in = mode in ("decode", "prefill_chunk")
+    cache_in = mode in ("decode", "prefill_chunk", "verify")
     cache_blocks = cache["blocks"] if cache is not None else None
 
     def body(carry, xs):
@@ -198,7 +210,8 @@ def forward(params, cfg, tokens, *, mode="train", pos=0, cache=None,
         for i, spec in enumerate(cfg.pattern):
             x, nc, a = block_apply(x, bp[i], cfg, spec, mode=mode, pos=pos,
                                    cache=bc[i], cache_len=cache_len,
-                                   pages=pages, attn_extent=attn_extent)
+                                   pages=pages, attn_extent=attn_extent,
+                                   n_tok=n_tok)
             new_cs.append(nc)
             aux = aux + a
         ys = tuple(new_cs) if with_cache else ()
@@ -220,6 +233,8 @@ def forward(params, cfg, tokens, *, mode="train", pos=0, cache=None,
     if with_cache:
         if mode == "decode":
             new_pos = cache["pos"] + 1
+        elif mode == "verify":
+            new_pos = cache["pos"]          # host-authoritative positions
         elif mode == "prefill_chunk":
             new_pos = jnp.asarray(pos + s, jnp.int32)
         else:

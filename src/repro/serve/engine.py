@@ -83,7 +83,7 @@ from ..core import UMTRuntime, io
 from ..steps import (chunkable, init_cache, make_batched_insert_step,
                      make_decode_step, make_prefill_chunk_step,
                      make_prefill_step, make_prefix_gather_step,
-                     make_serve_step)
+                     make_serve_step, make_verify_step, speculatable)
 from .kvstate import KVState, alias_safe
 from .pager import GARBAGE_PAGE
 from .policy import SchedulerPolicy, SlotView, make_policy
@@ -176,6 +176,13 @@ def make_jit_steps(cfg, mesh=None, cache_len: int = 64, *,
             cfg, mesh, cache_len=cache_len, page_size=page_size))
             if page_size is not None and chunkable(cfg, cache_len)
             else None),
+        # speculative-decode verify (draft-and-verify multi-token decode,
+        # see ServeEngine ``spec=``) — jit is lazy, so an unused verify
+        # step costs nothing; None where the config cannot be bit-exact
+        "verify": (jax.jit(make_verify_step(
+            cfg, mesh, cache_len=cache_len, page_size=page_size),
+            donate_argnums=(1,) if donate else ())
+            if speculatable(cfg, cache_len) else None),
     }
 
 
@@ -238,6 +245,27 @@ class ServeEngine:
         transparently.  "on" raises on a non-qualifying engine; "off"
         disables it (the benchmark A/B leg).  Requests with ``patches``
         never match (the trie keys on token ids alone).
+    spec : str | None, optional
+        Speculative decoding (draft-and-verify multi-token decode).
+        ``None``/"off" keeps tick-by-tick decode (the A/B leg); "ngram"
+        turns on n-gram/prompt-lookup drafting
+        (:class:`repro.serve.spec.NgramDrafter`): each tick a drafter
+        proposes up to ``spec_k`` continuation tokens per live slot and
+        ONE verify dispatch scores the whole window; the longest
+        agreeing draft prefix plus the model's correction is committed.
+        Committed tokens are argmax outputs of the target model, so the
+        emitted stream is **bit-identical to tick-by-tick decode by
+        construction** — speculation only changes how many device
+        dispatches it takes (< 1 per token when drafts hit).  Draft
+        length and per-slot abandonment are policy decisions
+        (``SchedulerPolicy.spec_draft_k``/``spec_drafter``).  Requires
+        a chunk-exact config with a scalar token frontend
+        (``repro.steps.speculatable``) — raises ``ValueError``
+        otherwise.
+    spec_k : int, optional
+        Max draft window length (static verify pad width; default 4).
+        Each spec engine compiles two verify shapes: S=1 (no slot
+        drafted this tick) and S=spec_k+1.
     sync_ticks : bool
         Block on each decode tick before timestamping it — makes the
         tick-interval stats measure real compute cadence (benchmarks);
@@ -260,7 +288,8 @@ class ServeEngine:
                  max_prefill_batch: int | None = None,
                  sync_ticks: bool = False, donate: bool | None = None,
                  paged_kernel: bool | None = None, policy=None,
-                 prefix_cache: bool | str | None = None):
+                 prefix_cache: bool | str | None = None,
+                 spec: str | None = None, spec_k: int = 4):
         self.cfg = cfg
         self.slots = slots
         self.cache_len = cache_len
@@ -348,6 +377,27 @@ class ServeEngine:
                 make_prefill_chunk_step(cfg, mesh, cache_len),
                 donate_argnums=(1,) if self.donate else (),
                 static_argnames=("attn_extent", "want_logits"))
+        # speculative decoding: spec mode resolves to a drafter (a policy
+        # decision) + the verify jit; both shapes (S=1 and S=spec_k+1)
+        # compile lazily on first use
+        self.spec_mode = None if spec in (None, "off") else str(spec)
+        self.spec_k = int(spec_k)
+        self.verify = jit_steps.get("verify")
+        self.drafter = None
+        if self.spec_mode is not None:
+            if self.spec_k < 1:
+                raise ValueError(f"spec_k={spec_k}: need >= 1")
+            if not speculatable(cfg, cache_len):
+                raise ValueError(
+                    f"{cfg.name}: speculative decoding needs a chunk-exact "
+                    "config (no MoE, no SSM, no SWA ring shorter than "
+                    "cache_len) and a scalar greedy-token frontend")
+            if self.verify is None:
+                self.verify = jax.jit(
+                    make_verify_step(cfg, mesh, cache_len=cache_len,
+                                     page_size=page_size),
+                    donate_argnums=(1,) if self.donate else ())
+            self.drafter = self.policy.spec_drafter(self, self.spec_mode)
         # chunk width for prefill-replay restores when the engine has no
         # steady-state prefill_chunk of its own: chunk-step shapes are
         # bounded by the chunk geometry (last-chunk widths <= c, extent
@@ -460,6 +510,16 @@ class ServeEngine:
         self.stats_evictions = 0
         self.stats_restores = 0
         self.stats_pages_grown = 0
+        # multi-token commits can cross several page boundaries per tick:
+        # count the ticks where one slot grew more than one page at once
+        self.stats_pages_grown_multi = 0
+        # speculative decoding: dispatch/commit accounting.  The honest
+        # measured axis on a dispatch-bound host is decode_dispatches /
+        # decode_tokens — exactly 1.0 tick-by-tick, < 1.0 when drafts hit
+        self.stats_decode_dispatches = 0
+        self.stats_spec_drafted = 0
+        self.stats_spec_accepted = 0
+        self.stats_spec_rollbacks = 0
         # prefix-cache counters (satellite of the pager/trie stats):
         # tokens_saved = prompt positions the hit path never prefilled
         self.stats_prefix_hits = 0
@@ -1246,14 +1306,20 @@ class ServeEngine:
         if len(key) >= self.page_size:
             self.prefix.insert(key, req.pages, len(key))
 
-    def _page_faults(self):
+    def _page_faults(self, ahead=None):
         """On-demand growth: extend a live slot's block table as its next
-        write position crosses a page boundary (one page per slot per
-        tick at most).  Pool exhaustion here is a *block* surfaced to the
-        policy, which must unblock it by naming a victim to evict — the
-        freed pages re-admit the faulting slot (paper: every monitored
-        block pairs with the unblock that releases it).  Under worst-case
-        reservation the fault condition never fires, so this is one
+        write position crosses a page boundary.  ``ahead`` (optional,
+        (slots,) ints) is the speculative-decode lookahead — this tick's
+        verify window writes positions up to ``_slot_pos[s] + ahead[s]``,
+        which can cross *several* page boundaries at once (k > page_size);
+        the loop simply keeps growing until the whole window is covered.
+        Pool exhaustion here is a *block* surfaced to the policy, which
+        must unblock it by naming a victim to evict — the freed pages
+        re-admit the faulting slot (paper: every monitored block pairs
+        with the unblock that releases it).  Under worst-case reservation
+        the fault condition never fires — the admission reservation
+        covers every position the window can write (the engine clamps
+        draft length to the remaining budget) — so this stays one
         comparison per live slot per tick."""
         grown = evicted = False
         ps = self.page_size
@@ -1267,13 +1333,16 @@ class ServeEngine:
             if not self._active[s]:     # evicted as a victim this pass
                 continue
             req = self._slot_req[s]
-            while self._active[s] and \
-                    len(req.pages) * ps <= self._slot_pos[s]:
+            need = self._slot_pos[s] + \
+                (0 if ahead is None else int(ahead[s]))
+            grown_here = 0
+            while self._active[s] and len(req.pages) * ps <= need:
                 got = self._alloc_pages(1)
                 if got is not None:
                     self.kv.grow_slot_pages(s, got, base=len(req.pages))
                     req.pages.extend(got)
                     self.stats_pages_grown += 1
+                    grown_here += 1
                     grown = True
                     continue
                 victim = self.policy.select_victim(
@@ -1285,6 +1354,8 @@ class ServeEngine:
                         "the only unblock for an on-demand fault")
                 self._evict_slot(int(victim))
                 evicted = True
+            if grown_here > 1:
+                self.stats_pages_grown_multi += 1
             if not self._active.any():
                 break
         if grown or evicted:
@@ -1346,6 +1417,7 @@ class ServeEngine:
                     self._params, kv.cache, self._tokens,
                     self._active_dev)
             kv.commit(new_cache, donated=self.donate)
+        self.stats_decode_dispatches += 1
         self._rebind_tokens(new_tokens)
         self._slot_pos[self._active] += 1   # each live slot wrote one pos
         if self.sync_ticks:
@@ -1398,6 +1470,158 @@ class ServeEngine:
         self.kv.flush(synced=freed or self.sync_ticks
                       or host_toks is not None)
 
+    def _spec_window(self, req: Request) -> list[int]:
+        """Draft a verify window for one live slot: the policy decides
+        how hard to speculate, the drafter proposes, the engine clamps to
+        its static pad width and to the slot's remaining token budget —
+        so the window can never write a position the never-speculating
+        run could not (the admission reservation / ``_validate``
+        arithmetic stays exact)."""
+        k = min(int(self.policy.spec_draft_k(self, req)), self.spec_k,
+                req.max_new - len(req.out_tokens) - 1)
+        if k <= 0:
+            return []
+        # host context = original prompt + everything emitted (spec-mode
+        # commits are host ints; the prefill token may be a numpy scalar)
+        ctx = [int(t) for t in np.asarray(req.tokens).reshape(-1)] \
+            + [int(t) for t in req.out_tokens]
+        return [int(d) for d in self.drafter.draft(ctx, k)[:k]]
+
+    def _tick_spec(self):
+        """One speculative tick: draft per slot, verify the whole pool's
+        windows in ONE dispatch, commit each slot's longest agreeing
+        draft prefix + the model's correction.  Every tick runs through
+        the verify jit — including no-draft ticks (S=1), which compute
+        exactly the decode tick (``pos`` is host-authoritative under
+        spec, so the decode jit's device-side ``pos + 1`` would go
+        stale).  Acceptance is a host decision, so every spec tick syncs
+        the argmaxes — the measured trade: the off leg keeps the async
+        pipeline, the spec leg buys fewer dispatches per committed token
+        (the PASS-gated axis on this dispatch-bound container)."""
+        kv = self.kv
+        if self._policy_may_evict:
+            v = self.policy.maybe_evict(self, self._slot_views())
+            if v is not None:
+                self._evict_slot(int(v))
+                self._rebind_active()
+                if self.paged:
+                    kv.sync_table()
+        # draft before the fault pass: on-demand growth must cover the
+        # whole verify window, not just the next position — a window can
+        # cross several page boundaries at once
+        drafts = {}
+        for s in np.flatnonzero(self._active):
+            s = int(s)
+            d = self._spec_window(self._slot_req[s])
+            if d:
+                drafts[s] = d
+        if self.paged:
+            ahead = np.zeros((self.slots,), np.int64)
+            for s, d in drafts.items():
+                ahead[s] = len(d)
+            self._page_faults(ahead=ahead)
+            # the fault pass may have evicted a drafted slot
+            drafts = {s: d for s, d in drafts.items() if self._active[s]}
+        if not self._active.any():
+            return                      # everything evicted: no tick
+        live = [int(s) for s in np.flatnonzero(self._active)]
+        if kv.debug_validate and self.prefix is not None:
+            # write-privacy invariant over the whole window (not just
+            # the next position): every page the verify writes must be
+            # private to the slot
+            for s in live:
+                last = self._slot_pos[s] + len(drafts.get(s, ()))
+                for lp in range(int(self._slot_pos[s]) // self.page_size,
+                                int(last) // self.page_size + 1):
+                    pid = int(kv._table[s, lp])
+                    assert pid != GARBAGE_PAGE and \
+                        self.pager.refcount(pid) == 1 and \
+                        not self.pager.is_cached(pid), (
+                        f"slot {s} would verify-write shared/cached "
+                        f"page {pid}")
+        # two static verify shapes: S=1 (nobody drafted) or S=spec_k+1
+        s_width = 1 + (self.spec_k if drafts else 0)
+        toks = np.zeros((self.slots, s_width), np.int32)
+        n_tok = np.zeros((self.slots,), np.int32)   # 0 = dead slot
+        for s in live:
+            req = self._slot_req[s]
+            win = [int(np.asarray(req.out_tokens[-1]).reshape(()))] \
+                + drafts.get(s, [])
+            toks[s, :len(win)] = win
+            n_tok[s] = len(win)
+        # dispatch temporaries stay locals until the host sync below
+        toks_dev = jnp.array(toks)
+        pos_dev = jnp.array(self._slot_pos.astype(np.int32))
+        n_dev = jnp.array(n_tok)
+        with self._pool_lock:
+            if self.paged:
+                nxt, new_cache = self.verify(
+                    self._params, kv.cache, toks_dev, pos_dev, n_dev,
+                    kv.table_dev)
+            else:
+                nxt, new_cache = self.verify(
+                    self._params, kv.cache, toks_dev, pos_dev, n_dev)
+            kv.commit(new_cache, donated=self.donate)
+        self.stats_decode_dispatches += 1
+        host_nxt = np.asarray(nxt)      # forces the dispatch chain
+        now = time.monotonic()
+        if self._last_tick_t is not None:
+            with self._lock:
+                self._tick_intervals.append(now - self._last_tick_t)
+        self._last_tick_t = now
+        n_live = len(live)
+        self.stats_ticks += 1
+        self.stats_occupancy_sum += n_live / self.slots
+        if n_live > self.stats_max_live_slots:
+            self.stats_max_live_slots = n_live
+        freed = False
+        for s in live:
+            req = self._slot_req[s]
+            d = drafts.get(s, [])
+            # longest agreeing prefix: lane j's argmax is the token the
+            # model emits after committing the window up to lane j, so
+            # draft j+1 is accepted iff it equals argmax j — and the
+            # committed tokens are the ARGMAXES (never the drafts),
+            # which is the whole bit-identity argument
+            m = 0
+            while m < len(d) and int(host_nxt[s, m]) == d[m]:
+                m += 1
+            commit = [int(host_nxt[s, j]) for j in range(m + 1)]
+            n_before = len(req.out_tokens)
+            req.out_tokens.extend(commit)
+            self._slot_pos[s] += len(commit)
+            req.spec_drafted += len(d)
+            req.spec_accepted += m
+            self.stats_spec_drafted += len(d)
+            self.stats_spec_accepted += m
+            if m < len(d):
+                # rejected lanes roll back for free: their cache writes
+                # sit past the committed extent, position-masked out of
+                # every later read and overwritten by the next window
+                self.stats_spec_rollbacks += 1
+            stopped = False
+            if req.needs_host_tokens:
+                # may truncate out_tokens at a stop buried mid-window
+                stopped = self._hit_stop(req, n_new=len(commit))
+            # count only the tokens the stream keeps (post-truncation),
+            # so dispatches_per_token measures emitted, not computed
+            self.stats_decode_tokens += len(req.out_tokens) - n_before
+            if stopped or len(req.out_tokens) >= req.max_new:
+                req.stopped = stopped and len(req.out_tokens) < req.max_new
+                if req.stopped:
+                    with self._lock:
+                        self.stats_stopped_early += 1
+                self._finish(req)
+                self._prefix_insert_slot(req)
+                self._release_slot(s)
+                freed = True
+        if freed:
+            self._rebind_active()
+            if self.paged:
+                self.kv.sync_table()
+        # the host_nxt sync above proved the whole chain executed
+        self.kv.flush(synced=True)
+
     def _drained(self) -> bool:
         with self._lock:
             return (self._intake_done and not self._inserts
@@ -1407,7 +1631,8 @@ class ServeEngine:
         while True:
             self._do_inserts()
             if self._active.any():
-                self._tick()
+                self._tick_spec() if self.drafter is not None \
+                    else self._tick()
                 continue
             self._last_tick_t = None     # idle gap: not tick jitter
             if self._drained():
@@ -1452,6 +1677,19 @@ class ServeEngine:
             "evictions": self.stats_evictions,
             "restores": self.stats_restores,
             "pages_grown": self.stats_pages_grown,
+            "pages_grown_multi": self.stats_pages_grown_multi,
+            "decode_dispatches": self.stats_decode_dispatches,
+            "dispatches_per_token": (
+                self.stats_decode_dispatches
+                / max(self.stats_decode_tokens, 1)),
+            "spec": self.spec_mode or "off",
+            "spec_k": self.spec_k if self.spec_mode else 0,
+            "spec_drafted": self.stats_spec_drafted,
+            "spec_accepted": self.stats_spec_accepted,
+            "spec_rollbacks": self.stats_spec_rollbacks,
+            "spec_accept_rate": (
+                self.stats_spec_accepted
+                / max(self.stats_spec_drafted, 1)),
             "prefix_cache": self.prefix is not None,
             "prefix_hits": self.stats_prefix_hits,
             "prefix_tokens_saved": self.stats_prefix_tokens_saved,

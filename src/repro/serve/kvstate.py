@@ -200,9 +200,14 @@ class KVState:
         logical pages ``[base, base + len(ids))`` — the table extension a
         live slot needs when its ``pos`` crosses a page boundary
         mid-decode (policy: ``repro.serve.policy.OnDemandPolicy``).
-        Host-side only; unlike :meth:`bind_slot_pages` (admission needs
-        the device row immediately) the caller batches one
-        :meth:`sync_table` per tick over every slot grown that tick."""
+        ``ids`` may span several logical pages at once: a speculative
+        verify window (``spec_k`` drafts + 1 correction) can cross more
+        than one page boundary in a single tick when ``spec_k >=
+        page_size``, so the engine's fault pass grows the table to cover
+        the whole window, not just the next position.  Host-side only;
+        unlike :meth:`bind_slot_pages` (admission needs the device row
+        immediately) the caller batches one :meth:`sync_table` per tick
+        over every slot grown that tick."""
         assert self.paged
         assert 0 <= base and base + len(ids) <= self.pages_per_slot, (
             f"slot {slot}: grow [{base}, {base + len(ids)}) exceeds "

@@ -12,9 +12,11 @@ policy reserves every page a request could ever touch
 (``prompt + max_new - 1`` token slots) at admission — a request that is
 admitted can then always run to completion, so admission simply *blocks*
 until enough pages free up, deadlock-free.  The on-demand policy
-reserves only the prefill extent and grows one page at a time mid-decode
-(``alloc(1)``); exhaustion there is resolved by eviction, not by
-waiting.  Either way the pager stays pure mechanism: an all-or-nothing
+reserves only the prefill extent and grows page by page mid-decode
+(``alloc(1)`` per crossing — a speculative verify window can cross
+several page boundaries in one tick, so the engine's fault pass may
+alloc more than once per slot per tick); exhaustion there is resolved
+by eviction, not by waiting.  Either way the pager stays pure mechanism: an all-or-nothing
 free list, no partial grants, a freed page immediately reusable by any
 slot.
 

@@ -122,6 +122,36 @@ class SchedulerPolicy:
         through this without touching mechanism."""
         return None
 
+    # ------------------------------------------------ speculative decoding
+    #: abandon speculation for a slot whose measured acceptance rate has
+    #: fallen below this after ``spec_warmup`` drafted tokens — a stream
+    #: the drafter cannot predict should pay 1 dispatch/token, not
+    #: 1 dispatch/token *plus* wasted verify lanes
+    spec_min_accept = 0.1
+    spec_warmup = 16
+
+    def spec_draft_k(self, eng, req) -> int:
+        """Draft window length for this slot this tick (0 = plain decode
+        tick for the slot).  Speculation is a *policy* decision: how hard
+        to speculate is the serving analogue of how much extra work to
+        schedule on an idle core — pure upside when drafts hit (several
+        committed tokens amortise one dispatch), pure waste when they
+        miss (the dispatch still commits exactly one token, slightly
+        wider).  Output tokens never depend on it.  The engine clamps
+        the return to its static pad width (``eng.spec_k``) and to the
+        slot's remaining budget."""
+        if (req.spec_drafted >= self.spec_warmup and
+                req.spec_accepted < self.spec_min_accept * req.spec_drafted):
+            return 0
+        return eng.spec_k
+
+    def spec_drafter(self, eng, mode):
+        """Drafter instance for engine spec mode ``mode`` — which drafts
+        to trust is policy, not mechanism.  Override to swap in a
+        model-based drafter without touching the engine."""
+        from .spec import make_drafter
+        return make_drafter(mode)
+
     def prefix_evict(self, eng, need_pages: int) -> int:
         """Prefix-cache reclaim decision, consulted when the pool cannot
         cover an allocation (admission reservation or on-demand growth)

@@ -52,7 +52,8 @@ class Request:
     __slots__ = ("rid", "tokens", "patches", "max_new", "out_tokens",
                  "t_submit", "t_first", "t_done", "done", "slot", "error",
                  "eos_id", "stop", "stopped", "pages", "total_len",
-                 "evictions", "resume", "restore_tokens", "prefix_hold")
+                 "evictions", "resume", "restore_tokens", "prefix_hold",
+                 "spec_drafted", "spec_accepted")
 
     def __init__(self, rid, tokens, patches=None, max_new_tokens: int = 16,
                  eos_id: int | None = None, stop=None):
@@ -82,6 +83,10 @@ class Request:
         #                                  from match (prefill thread) to
         #                                  admission, where they are
         #                                  adopted into ``pages``
+        self.spec_drafted: int = 0       # draft tokens verified for this
+        self.spec_accepted: int = 0      # request / how many were accepted
+        #                                  (drives per-slot abandonment,
+        #                                  see SchedulerPolicy.spec_draft_k)
 
     @property
     def needs_host_tokens(self) -> bool:

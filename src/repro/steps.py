@@ -157,6 +157,18 @@ def chunkable(cfg, cache_len: int) -> bool:
     return True
 
 
+def speculatable(cfg, cache_len: int) -> bool:
+    """Can draft-verify speculative decoding be bit-exact for this config?
+
+    The verify window rides the same seq-extent-invariance bar as chunked
+    prefill (:func:`chunkable` — no MoE capacity coupling, no SSD scan
+    boundaries, no true SWA ring), plus a scalar greedy-token frontend:
+    audio codebook steps emit a K-vector per position, which the n-gram
+    drafter and the longest-agreeing-prefix acceptance rule do not
+    model."""
+    return chunkable(cfg, cache_len) and cfg.frontend != "audio_codebooks"
+
+
 def init_paged_slot_cache(cfg, slots: int, cache_len: int, dtype,
                           page_size: int, num_pages: int):
     """Slot cache with linear attention leaves replaced by paged pools.
@@ -386,6 +398,72 @@ def make_decode_step(cfg, mesh=None, *, cache_len: int | None = None,
     return decode_step
 
 
+def make_verify_step(cfg, mesh=None, *, cache_len: int | None = None,
+                     page_size: int | None = None):
+    """Draft-verify speculative decode over the slot pool:
+
+        (params, cache, tokens, pos, n_tok[, table]) -> (argmax, cache)
+
+    ``tokens`` is the (slots, S) verify window per slot — the last
+    committed token followed by up to S-1 drafted tokens, right-padded;
+    ``pos`` (slots,) int32 is the cache position the window starts at
+    (the last committed token's KV, not yet written, goes there — decode
+    has the same one-behind convention); ``n_tok`` (slots,) int32 is the
+    valid window length per slot (0 = dead slot: every one of its writes
+    lands on the garbage page / is dropped, and its argmax row is
+    garbage the engine ignores).  The step cache-appends the whole
+    window and scores all S positions in ONE device dispatch; the
+    returned (slots, S) argmax at lane j is exactly the token
+    tick-by-tick decode would emit after committing ``tokens[:, :j+1]``.
+    Greedy acceptance of the longest agreeing draft prefix plus the
+    first correction is therefore bit-identical to tick-by-tick decode
+    *by construction*: the committed tokens ARE argmax outputs of the
+    target model, never draft guesses.  At S == 1 the lowered
+    computation is the decode tick's (same formulation — see
+    :func:`repro.models.attention.verify_attention`); for S > 1 lane
+    equality is seq-extent invariance, the property the ``chunkable``
+    machinery already establishes on this backend.
+
+    Rollback of rejected lanes is free: their cache writes sit at
+    positions at or past the committed extent, which every later read
+    position-masks out and the next window overwrites in place.
+
+    ``pos`` rides as a per-dispatch *argument* (host-authoritative, like
+    the block table): the engine owns acceptance, so the cache's
+    ``pos`` leaf comes back unchanged.  Paged attention always takes the
+    dense-gather oracle path here — the fused Pallas kernel is a
+    single-query decode specialisation and stays on the decode leg.
+
+    Donation: safe to jit with ``donate_argnums=(1,)`` — the same
+    shape/dtype-preserving cache append as decode (trace-time checked).
+    """
+    paged = page_size is not None
+    if paged:
+        assert cache_len is not None and cache_len % page_size == 0
+    assert cache_len is None or speculatable(cfg, cache_len), (
+        f"{cfg.name}: speculative decoding needs a chunk-exact config "
+        "(no MoE, no SSM, no SWA ring shorter than cache_len) and a "
+        "scalar greedy-token frontend")
+
+    def verify_step(params, cache, tokens, pos, n_tok, table=None):
+        with sharding_ctx(mesh, DECODE_RULES):
+            pc = cast_tree(params, cfg.dtype)
+            pages = ({"table": table, "page_size": page_size,
+                      "cache_len": cache_len, "kernel": False}
+                     if paged else None)
+            out = forward(pc, cfg, tokens, mode="verify", pos=pos,
+                          cache=cache, cache_len=cache_len, pages=pages,
+                          n_tok=n_tok)
+            nxt = jnp.argmax(out["logits"], axis=-1).astype(jnp.int32)
+            return nxt, out["cache"]
+
+    if not paged:
+        def verify_step_dense(params, cache, tokens, pos, n_tok):
+            return verify_step(params, cache, tokens, pos, n_tok)
+        return verify_step_dense
+    return verify_step
+
+
 def make_prefill_chunk_step(cfg, mesh=None, cache_len: int | None = None):
     """Cache-append prefill continuation (chunked/preemptible prefill):
 
@@ -428,7 +506,7 @@ def make_prefill_chunk_step(cfg, mesh=None, cache_len: int | None = None):
 __all__ = ["init_train_state", "make_train_step", "make_prefill_step",
            "make_serve_step", "make_insert_step", "make_decode_step",
            "make_batched_insert_step", "make_prefill_chunk_step",
-           "make_prefix_gather_step",
+           "make_prefix_gather_step", "make_verify_step",
            "init_slot_cache", "init_paged_slot_cache", "paged_names",
-           "chunkable", "greedy_oneshot", "cast_tree", "init_cache",
-           "OptHParams"]
+           "chunkable", "speculatable", "greedy_oneshot", "cast_tree",
+           "init_cache", "OptHParams"]

@@ -110,6 +110,75 @@ def test_hit_stop_scans_full_committed_window():
     assert r.out_tokens == [7, 1, 2, 7]
 
 
+# --------------------------------------------- drafting, host-only (fast)
+def test_ngram_drafter_prompt_lookup():
+    """Prompt lookup: the draft is the continuation of the most recent
+    earlier occurrence of the stream's suffix n-gram — longest n-gram
+    wins, most recent occurrence wins, no match means no draft."""
+    from repro.serve.spec import NgramDrafter
+
+    d = NgramDrafter()
+    # suffix [7, 8] recurs at the start; its continuation there is [9, 1]
+    assert d.draft([7, 8, 9, 1, 7, 8], 2) == [9, 1]
+    # both the 2-gram [2, 3] and the 3-gram [1, 2, 3] recur: the longer
+    # match picks the continuation [5], not [1]
+    assert d.draft([1, 2, 3, 5, 9, 2, 3, 1, 2, 3], 1) == [5]
+    # [4, 5] occurs twice earlier — the most recent one (-> [7]) wins
+    assert d.draft([4, 5, 6, 4, 5, 7, 4, 5], 1) == [7]
+    # fewer than k available past the match is legal
+    assert d.draft([7, 8, 9, 7, 8], 5) == [9, 7, 8]
+    # degenerate inputs: no context, no repeat, k == 0
+    assert d.draft([], 3) == []
+    assert d.draft([1, 2, 3], 2) == []
+    assert d.draft([7, 8, 9, 7, 8], 0) == []
+
+
+def test_make_drafter_parses_specs():
+    from repro.serve.spec import Drafter, NgramDrafter, make_drafter
+
+    d = make_drafter("ngram")
+    assert isinstance(d, NgramDrafter)
+    assert (d.max_ngram, d.min_ngram) == (3, 1)
+    d = make_drafter("ngram:4,2")
+    assert (d.max_ngram, d.min_ngram) == (4, 2)
+    assert make_drafter("ngram:5").max_ngram == 5
+    mine = NgramDrafter()
+    assert make_drafter(mine) is mine           # instance passthrough
+    with pytest.raises(ValueError, match="unknown drafter"):
+        make_drafter("model")
+    with pytest.raises(NotImplementedError):
+        Drafter().draft([1, 2], 1)
+
+
+def test_policy_abandons_speculation_per_request():
+    """spec_draft_k: a request whose observed acceptance rate stays under
+    spec_min_accept after the warmup budget gets no more drafts (its
+    verify lanes are pure waste) — while a well-predicted request keeps
+    the full window."""
+    from types import SimpleNamespace
+
+    from repro.serve import SchedulerPolicy
+
+    pol = SchedulerPolicy()
+    eng = SimpleNamespace(spec_k=4)
+    cold = Request(0, None)
+    assert (cold.spec_drafted, cold.spec_accepted) == (0, 0)
+    assert pol.spec_draft_k(eng, cold) == 4     # warmup: always draft
+
+    bad = Request(1, None)
+    bad.spec_drafted, bad.spec_accepted = 20, 1     # 5% < 10% floor
+    assert pol.spec_draft_k(eng, bad) == 0
+
+    good = Request(2, None)
+    good.spec_drafted, good.spec_accepted = 20, 10
+    assert pol.spec_draft_k(eng, good) == 4
+
+    # still inside the warmup budget: no abandonment yet
+    young = Request(3, None)
+    young.spec_drafted, young.spec_accepted = pol.spec_warmup - 1, 0
+    assert pol.spec_draft_k(eng, young) == 4
+
+
 # ------------------------------------------------- engine equivalence (slow)
 N_REQ, PLEN, GEN_MAX = 8, 8, 6
 CACHE_LEN = PLEN + GEN_MAX              # 14 -> auto page_size 7
@@ -482,3 +551,50 @@ def test_engine_response_sink_and_weights_load_task(built):
     for r in reqs:
         got = np.asarray(r.out_tokens, np.int32)
         assert np.array_equal(got, b["ref"][r.rid, :3])
+
+
+@pytest.mark.slow
+def test_spec_decode_ab_bit_identical_fewer_dispatches(built):
+    """The tentpole A/B at the engine level: on a repetitive workload the
+    n-gram drafter's accepted windows commit several tokens per verify
+    dispatch, so the spec leg spends strictly fewer device dispatches per
+    emitted token than tick-by-tick decode — with every stream (including
+    an EOS early-exit) bit-identical across legs and to the one-shot
+    reference, by construction."""
+    import jax
+    import jax.numpy as jnp
+    from repro.steps import greedy_oneshot, make_serve_step
+
+    b = built
+    # templated workload: a 2-token motif tiled across the prompt makes
+    # prompt-lookup hit from the very first decode tick
+    prompts = np.array(b["prompts"], copy=True)
+    prompts[:] = np.tile(prompts[:, :2], (1, PLEN // 2))
+    serve_step = jax.jit(make_serve_step(b["cfg"]))
+    ref = np.asarray(greedy_oneshot(b["steps"]["prefill"], serve_step,
+                                    b["params"], jnp.asarray(prompts),
+                                    None, GEN_MAX))
+    eos = int(ref[0, GEN_MAX - 2])      # one stream exits inside a window
+
+    def leg(spec):
+        reqs = [Request(i, prompts[i], max_new_tokens=GEN_MAX,
+                        eos_id=eos if i == 0 else None)
+                for i in range(N_REQ)]
+        stats, pager = _run_engine(b, reqs, spec=spec, spec_k=3)
+        assert pager.live_refs == 0
+        return [list(r.wait()) for r in reqs], stats
+
+    toks_off, off = leg(None)
+    toks_on, on = leg("ngram")
+    assert toks_on == toks_off          # bit-identical, the hard gate
+    for i, t in enumerate(toks_on):
+        row = ref[i]
+        assert t == list(row[:len(t)]) and (
+            len(t) == GEN_MAX or row[len(t) - 1] == eos)
+    assert off["spec"] == "off" and off["spec_drafted"] == 0
+    assert on["spec"] == "ngram"
+    assert on["spec_drafted"] > 0 and on["spec_accepted"] > 0
+    assert 0.0 < on["spec_accept_rate"] <= 1.0
+    # the win: same tokens, fewer dispatches
+    assert on["dispatches_per_token"] < off["dispatches_per_token"]
+    assert on["decode_dispatches"] < off["decode_dispatches"]

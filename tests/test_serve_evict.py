@@ -97,7 +97,8 @@ def built():
 
 
 def _run(b, policy, *, num_pages=None, jit_steps=None, page_size="use",
-        gens=None, eos=None, slots=3, watchdog_s=None):
+        gens=None, eos=None, stop=None, slots=3, watchdog_s=None,
+        spec=None, spec_k=4):
     """Drive one engine over the standard request set; assert every
     stream equals its one-shot row prefix and the pool drains clean.
     Returns the stats dict.  ``watchdog_s`` waits per request with a
@@ -110,12 +111,13 @@ def _run(b, policy, *, num_pages=None, jit_steps=None, page_size="use",
                     else b["patches"][i],
                     max_new_tokens=int(gens[i]) if gens is not None
                     else GEN,
-                    eos_id=None if eos is None else eos[i])
+                    eos_id=None if eos is None else eos[i],
+                    stop=None if stop is None else stop[i])
             for i in range(N_REQ)]
     eng = ServeEngine(b["cfg"], b["params"], slots=slots,
                       cache_len=b["cache_len"], umt=True, n_cores=4,
                       jit_steps=steps, page_size=ps, num_pages=num_pages,
-                      policy=policy)
+                      policy=policy, spec=spec, spec_k=spec_k)
     eng.kv.debug_validate = True      # donation/pinning invariant, live
     eng.start()
     for r in reqs:
@@ -270,6 +272,179 @@ def test_restore_retraces_bounded(built):
         "routing is leaking per-depth shapes")
 
 
+# ------------------------------------- speculative decoding x churn (slow)
+# the speculation gate: chunkable (extent-invariant) non-audio configs —
+# exactly the prefill-replay restore population, so spec-mode evictions
+# never meet the decode-replay path
+SPEC_ARCHS = ["qwen2.5-14b", "minicpm3-4b", "internvl2-2b"]
+
+
+def _spec_data(b):
+    """The standard request set rewritten repetitive (each prompt a
+    2-token motif tiled) plus matching one-shot rows — the n-gram
+    drafter's home turf, so speculation actually fires on every arch
+    regardless of vocab size (random prompts only draft by chance
+    collision on small vocabularies)."""
+    if "spec_data" not in b:
+        prompts = np.array(b["prompts"], copy=True)
+        prompts[:] = np.tile(prompts[:, :2], (1, PLEN // 2))
+        serve_step = jax.jit(make_serve_step(b["cfg"]))
+        patches = (None if b["patches"] is None
+                   else jnp.asarray(b["patches"]))
+        ref = np.asarray(greedy_oneshot(
+            b["steps"]["prefill"], serve_step, b["params"],
+            jnp.asarray(prompts), patches, GEN))
+        b["spec_data"] = dict(b, prompts=prompts, ref=ref)
+    return b["spec_data"]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", SPEC_ARCHS)
+def test_spec_decode_bit_exact_under_eviction_churn(arch, built):
+    """Speculative decoding must not be able to change the emitted
+    stream: spec=ngram under forced fuzz evictions (restore replays into
+    a stream whose tail was committed multi-token) still emits every
+    request's one-shot row bit-exactly (asserted by the harness), on
+    GQA, MLA and the vision frontend."""
+    b = _spec_data(_build(arch, built))
+    stats = _run(b, OnDemandFuzzEvict(seed=5), spec="ngram")
+    assert stats["spec"] == "ngram"
+    assert stats["spec_drafted"] > 0, "drafter never fired"
+    assert stats["evictions"] > 0
+    assert stats["restores"] == stats["evictions"]
+    # every tick is a verify dispatch; acceptance only lowers the ratio
+    assert stats["dispatches_per_token"] <= 1.0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("layout,donate", [("dense", True),
+                                           ("paged", False),
+                                           ("kernel", True)])
+def test_spec_decode_grid_layout_donation(layout, donate, built):
+    """Spec decode across the layout/donation grid (verify always reads
+    through the gather+dense path — the fused kernel leg checks the
+    engine tolerates kernel-built steps while speculating), with an eos
+    request in the mix and forced evictions.  Tokens bit-exact."""
+    b = _spec_data(_build("qwen2.5-14b", built))
+    ps = b["ps"] if layout != "dense" else None
+    steps = make_jit_steps(b["cfg"], cache_len=b["cache_len"],
+                           page_size=ps, donate=donate,
+                           paged_kernel=layout == "kernel")
+    policy = (OnDemandFuzzEvict(seed=7) if layout != "dense"
+              else FuzzEvictPolicy(seed=7))
+    eos = [None] * N_REQ
+    eos[0] = int(b["ref"][0, 2])
+    stats = _run(b, policy, jit_steps=steps, page_size=ps, eos=eos,
+                 spec="ngram")
+    assert stats["evictions"] > 0
+    assert stats["spec_drafted"] > 0
+    assert stats["donate"] is donate
+
+
+class OracleDrafter:
+    """Drafts the one-shot row's true continuation (located by matching
+    the slot's ctx against prompt+ref): every window is full length and
+    fully accepted, deterministically, on any arch — the swap-in-a-
+    better-drafter path the ``Drafter`` interface exists for."""
+
+    name = "oracle"
+
+    def __init__(self, prompts, ref):
+        self.streams = [
+            [int(t) for t in np.asarray(p).reshape(-1)] +
+            [int(t) for t in r]
+            for p, r in zip(prompts, ref)]
+
+    def draft(self, ctx, k):
+        n = len(ctx)
+        for s in self.streams:
+            if n <= len(s) and s[:n] == ctx:
+                return s[n:n + k]
+        return []
+
+
+class OraclePolicy(OnDemandPolicy):
+    """On-demand policy whose drafter is the oracle — speculation depth
+    and drafter choice are policy decisions, so no engine change."""
+
+    def __init__(self, b):
+        self._drafter = OracleDrafter(b["prompts"], b["ref"])
+
+    def spec_drafter(self, eng, mode):
+        return self._drafter
+
+
+@pytest.mark.slow
+def test_spec_window_multipage_growth_under_pressure(built):
+    """Satellite: spec_k >= page_size means one verify window crosses
+    several page boundaries, so the on-demand fault pass must grow
+    multiple pages for one slot in one tick (`pages_grown_multi`), and
+    under a pool barely above one request's worst case that growth
+    blocks and is unblocked by eviction.  The oracle drafter (plugged in
+    through the policy hook) makes every window full length, so the
+    multi-page fault is deterministic.  Streams stay bit-exact and the
+    pool drains clean (harness)."""
+    b = _build("qwen2.5-14b", built)          # ps == 2 < spec_k
+    w = -(-(PLEN + GEN - 1) // b["ps"])       # worst-case pages/request
+    stats = _run(b, OraclePolicy(b), num_pages=w + 2, spec="oracle",
+                 spec_k=5, watchdog_s=120)
+    assert stats["spec_drafted"] > 0
+    assert stats["spec_accepted"] == stats["spec_drafted"], (
+        "oracle drafts are the true continuation — rejecting one means "
+        "the verify lanes disagree with tick-by-tick decode")
+    assert stats["pages_grown"] > 0
+    assert stats["pages_grown_multi"] > 0, (
+        "no tick ever grew a slot by >1 page — the window fault pass "
+        "is growing one page at a time")
+    assert stats["evictions"] > 0, "tight pool never evicted"
+
+
+@pytest.mark.slow
+def test_spec_with_prefix_cache_bit_exact(built):
+    """Spec decode on top of a warm radix trie: hit-path admissions
+    land mid-page, verify windows must never write a shared or cached
+    page (debug_validate asserts window write-privacy live), and the
+    emitted streams still equal the cold one-shot rows."""
+    b = _build("qwen2.5-14b", built)
+    stats = _run_prefix(b, spec="ngram")
+    assert stats["prefix_hits"] >= 1
+    assert stats["prefix_tokens_saved"] > 0
+    assert stats["spec_drafted"] > 0
+
+
+# ------------------------------------------- eviction x stop (slow)
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,kind", [("qwen2.5-14b", "eos"),
+                                       ("qwen2.5-14b", "stop"),
+                                       ("mixtral-8x7b", "eos"),
+                                       ("mixtral-8x7b", "stop")])
+def test_stop_fires_after_restore_on_both_replay_paths(arch, kind, built):
+    """Satellite: a stop condition that completes only near the end of
+    the stream meets forced evictions that land before it — the stop
+    must fire *after* restore, identically on both restore shapes:
+    prefill-replay (qwen2.5-14b, extent-invariant) and decode-replay
+    (mixtral-8x7b, MoE capacity is extent-bound).  The harness asserts
+    every truncated stream is the exact one-shot prefix; restores must
+    not re-emit, re-check, or lose the recorded stop state."""
+    b = _build(arch, built)
+    eos = stop = None
+    if kind == "eos":
+        # fires at the second-to-last position (or wherever the value
+        # first occurs — still a one-shot prefix either way)
+        eos = [int(b["ref"][i, GEN - 2]) for i in range(N_REQ)]
+    else:
+        # two-token stop sequence completing late: its first token can
+        # be committed before an eviction and completed after restore
+        stop = [[[int(b["ref"][i, GEN - 3]), int(b["ref"][i, GEN - 2])]]
+                for i in range(N_REQ)]
+    policy = OnDemandFuzzEvict(seed=13, period=2, max_evictions=6)
+    stats = _run(b, policy, eos=eos, stop=stop)
+    assert stats["evictions"] > 0
+    assert stats["restores"] == stats["evictions"]
+    assert stats["stopped_early"] > 0, (
+        "no stream stopped early — the stop tokens never matched")
+
+
 # ------------------------------------------- prefix-cache rows (slow)
 N_SHARED = 6          # shared system-prompt tokens (3 full pages, ps=2)
 
@@ -292,7 +467,8 @@ def _shared_prefix_data(b):
 
 
 def _run_prefix(b, *, policy=None, num_pages=None, jit_steps=None,
-                page_size="use", slots=3, prefix_cache="auto"):
+                page_size="use", slots=3, prefix_cache="auto",
+                spec=None, spec_k=4):
     """Drive one engine over the shared-prefix request set, request 0
     serialized to completion first so its pages warm the trie before
     the rest arrive.  Asserts every stream equals its one-shot row and
@@ -308,7 +484,8 @@ def _run_prefix(b, *, policy=None, num_pages=None, jit_steps=None,
     eng = ServeEngine(b["cfg"], b["params"], slots=slots,
                       cache_len=b["cache_len"], umt=True, n_cores=4,
                       jit_steps=steps, page_size=ps, num_pages=num_pages,
-                      policy=policy, prefix_cache=prefix_cache)
+                      policy=policy, prefix_cache=prefix_cache,
+                      spec=spec, spec_k=spec_k)
     eng.kv.debug_validate = True
     if eng.pager is not None:
         eng.pager.debug_validate = True

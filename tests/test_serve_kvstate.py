@@ -119,6 +119,21 @@ def test_grow_slot_pages_extends_the_garbage_tail():
         kv.grow_slot_pages(0, [5], base=CACHE_LEN // PS)
 
 
+def test_grow_slot_pages_multi_page_in_one_call():
+    """A speculative verify window can cross several page boundaries in
+    one tick (spec_k >= page_size): growth binds a multi-page batch in
+    one call, contiguously on the garbage tail, one mirror sync."""
+    kv = _kv()
+    ids = kv.pager.reserve(1)                    # 1 of 3 logical pages
+    kv.bind_slot_pages(2, ids)
+    more = kv.pager.alloc(2)                     # the whole window's worth
+    kv.grow_slot_pages(2, more, base=len(ids))
+    kv.sync_table()
+    assert list(np.asarray(kv.table_dev)[2]) == ids + more
+    with pytest.raises(AssertionError, match="logical pages"):
+        kv.grow_slot_pages(2, kv.pager.alloc(1), base=3)
+
+
 def test_dense_kvstate_has_no_pager_or_table():
     kv = _kv(paged=False)
     assert kv.pager is None and kv.table_dev is None

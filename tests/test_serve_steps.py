@@ -584,6 +584,148 @@ def test_chunked_prefill_rows_match_oneshot_prefill(arch, built):
         assert np.array_equal(got, ref), f"chunk={chunk}"
 
 
+# ------------------------------------------------- verify step (spec decode)
+# the speculation gate = chunkable (extent-invariant) non-audio configs:
+# GQA, MLA and the vision frontend qualify; MoE capacity / SSM state /
+# audio codebooks do not
+SPEC_STEP_ARCHS = ["qwen2.5-14b", "minicpm3-4b", "internvl2-2b"]
+
+
+def _verify_jit(b, page_size=None, donate=False):
+    from repro.steps import make_verify_step
+
+    key = f"verify_{page_size}_{donate}"
+    if key not in b:
+        b[key] = jax.jit(make_verify_step(b["cfg"],
+                                          cache_len=b["cache_len"],
+                                          page_size=page_size),
+                         donate_argnums=(1,) if donate else ())
+    return b[key]
+
+
+def test_verify_step_requires_speculatable():
+    """The gate: extent-bound configs (MoE capacity, SSM state) and the
+    audio frontend (a step emits a codebook vector, not one id) cannot
+    verify-append, and the step builder refuses them loudly."""
+    from repro.steps import make_verify_step, speculatable
+
+    for arch in ("mixtral-8x7b", "jamba-v0.1-52b", "musicgen-large"):
+        cfg = get(arch).tiny()
+        assert not speculatable(cfg, 16)
+        with pytest.raises(AssertionError):
+            make_verify_step(cfg, cache_len=16)
+    assert speculatable(get("qwen2.5-14b").tiny(), 16)
+
+
+@pytest.mark.parametrize("arch", SPEC_STEP_ARCHS)
+def test_verify_s1_ticks_equal_decode_ticks(arch, built):
+    """S=1 verify ticks (nobody drafted) *are* decode ticks — same
+    einsum formulation, host-authoritative pos: driving the whole pool
+    to completion through the verify jit alone must reproduce the
+    one-shot reference rows bit for bit."""
+    b = _build(arch, built)
+    cfg = b["cfg"]
+    ref = _oneshot_reference(b)
+    verify = _verify_jit(b)
+    pool = init_slot_cache(cfg, SLOTS, b["cache_len"], jnp.dtype(cfg.dtype))
+    pos = np.zeros((SLOTS,), np.int32)
+    toks = np.zeros((SLOTS, 1), np.int32)
+    for r in range(SLOTS):
+        rc, t0 = _row_prefill(b, r)
+        pool = b["insert"](pool, rc, jnp.int32(r))
+        pos[r] = int(np.asarray(rc["pos"]).reshape(-1)[0])
+        toks[r, 0] = int(np.asarray(t0)[0, 0])
+    outs = [toks.copy()]
+    n_tok = np.ones((SLOTS,), np.int32)
+    for _ in range(GEN - 1):
+        nxt, pool = verify(b["params"], pool, jnp.array(toks),
+                           jnp.array(pos), jnp.array(n_tok))
+        toks = np.asarray(nxt)[:, :1].astype(np.int32)
+        outs.append(toks.copy())
+        pos += 1
+    got = np.concatenate(outs, axis=1)
+    assert np.array_equal(got, ref)
+
+
+@pytest.mark.parametrize("arch", SPEC_STEP_ARCHS)
+@pytest.mark.parametrize("layout,donate", [("dense", False),
+                                           ("dense", True),
+                                           ("paged", False)])
+def test_verify_window_scores_the_decode_stream(arch, layout, donate,
+                                                built):
+    """One verify dispatch over a drafted window: lane i's argmax is the
+    token the tick-by-tick run emits at position i+1.  Perfect drafts →
+    every lane agrees (a full-window commit); a corrupted draft lane
+    leaves the lanes before it byte-identical (the committed prefix) and
+    its stale cache writes are overwritten by the next window
+    (rollback-for-free) — asserted by re-running the perfect window on
+    the same cache afterwards.  Dead slots stay masked (n_tok=0); the
+    paged leg uses page_size=1 so the window crosses a page boundary at
+    every position."""
+    b = _build(arch, built)
+    cfg = b["cfg"]
+    ref = _oneshot_reference(b)
+    k = GEN - 2             # drafts; S = k+1 lanes score ref[:, 1:GEN]
+    if layout == "paged":
+        ps = 1
+        num_pages = b["cache_len"] + 2
+        verify = _verify_jit(b, page_size=ps, donate=donate)
+        insert = jax.jit(make_batched_insert_step(
+            cfg, cache_len=b["cache_len"], page_size=ps))
+        pool = init_paged_slot_cache(cfg, SLOTS, b["cache_len"],
+                                     jnp.dtype(cfg.dtype), ps, num_pages)
+        table = np.zeros((SLOTS, b["cache_len"]), np.int32)
+    else:
+        verify = _verify_jit(b, donate=donate)
+        pool = init_slot_cache(cfg, SLOTS, b["cache_len"],
+                               jnp.dtype(cfg.dtype))
+        table = None
+    rc, t0 = _row_prefill(b, 0)
+    p0 = int(np.asarray(rc["pos"]).reshape(-1)[0])
+    if layout == "paged":
+        # bind every page the window can write (p0 .. p0+k), 1 token each
+        table[0, :p0 + k + 1] = np.arange(1, p0 + k + 2)
+        pool = insert(pool, rc, jnp.int32(0), jnp.int32(0),
+                      jnp.array(table[0]))
+    else:
+        pool = b["insert"](pool, rc, jnp.int32(0))
+    pos = jnp.array(np.array([p0, 0, 0], np.int32))
+    n_tok = jnp.array(np.array([k + 1, 0, 0], np.int32))
+
+    def window(draft):
+        toks = np.zeros((SLOTS, k + 1), np.int32)
+        toks[0, 0] = ref[0, 0]
+        toks[0, 1:] = draft
+        return jnp.array(toks)
+
+    def dispatch(toks, cache):
+        args = (b["params"], cache, toks, pos, n_tok)
+        if layout == "paged":
+            args = args + (jnp.array(table),)
+        return verify(*args)
+
+    # perfect drafts: the stream's own next tokens — every lane agrees
+    nxt, pool = dispatch(window(ref[0, 1:1 + k]), pool)
+    assert np.array_equal(np.asarray(nxt)[0], ref[0, 1:]), (
+        "perfect-draft window disagreed with the tick-by-tick stream")
+
+    # corrupt the last draft lane: the committed prefix (lanes before
+    # it) must stay byte-identical — lane k-1's scores never see lane
+    # k's token (causal masking inside the window)
+    bad = window(ref[0, 1:1 + k])
+    bad = bad.at[0, k].set((int(ref[0, k]) + 1) % cfg.vocab)
+    nxt, pool = dispatch(bad, pool)
+    assert np.array_equal(np.asarray(nxt)[0, :k], ref[0, 1:1 + k]), (
+        "a rejected draft lane changed the lanes before it")
+
+    # the corrupted run left stale KV past the committed extent: the
+    # next window overwrites it position-for-position, so a re-run of
+    # the perfect window must still agree on every lane
+    nxt, pool = dispatch(window(ref[0, 1:1 + k]), pool)
+    assert np.array_equal(np.asarray(nxt)[0], ref[0, 1:]), (
+        "stale rejected-draft KV leaked into a later verify window")
+
+
 # ------------------------------------------------- prefix-cache gather step
 @pytest.mark.parametrize("arch",
                          ["qwen2.5-14b", "minicpm3-4b", "musicgen-large"])
