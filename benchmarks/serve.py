@@ -59,10 +59,20 @@ Beyond the load sweep, three targeted phases (ISSUE 3/4 acceptance):
     device dispatches per emitted token strictly below 1.0 on the spec
     leg and strictly below the off leg's (``SPEC_DECODE,...`` line);
     wall-clock reported but not PASS-gated off-accelerator.
+  * tensor-parallel serving A/B (ISSUE 9) — the sharded engine on a
+    (1, ndev) device mesh vs the single-device engine at equal
+    *per-device* KV memory (head-dim sharding holds 1/ndev of the pool
+    per device, so ndev x the pages fit the same footprint): strictly
+    more sustained live slots hard-asserted, tokens bit-identical,
+    ``TP_SERVE,...`` PASS line; auto-skipped on one visible device
+    (CI forces 4 host devices via XLA_FLAGS).
+
+``--phases load,donation,kernel,equal_mem,policy,prefix,spec,tp,jitter``
+selects a subset (default all; ``--skip-phases`` = load only).
 
   python -m benchmarks.serve [--loads 32,256] [--requests 32] [--slots 4]
                              [--prompt-len 16] [--gen 16] [--cores 4]
-                             [--page-size 0=auto] [--smoke]
+                             [--page-size 0=auto] [--phases tp] [--smoke]
 """
 from __future__ import annotations
 
@@ -960,6 +970,110 @@ def bench_spec_decode(cfg, params, serve_step, *, slots, page_size,
     return out
 
 
+PHASES = ("load", "donation", "kernel", "equal_mem", "policy", "prefix",
+          "spec", "tp", "jitter")
+
+
+def bench_tp_serve(cfg, params, *, slots, cache_len, page_size,
+                   prompt_len, gen, cores, n_req, seed) -> list[ServeResult]:
+    """ISSUE 9 acceptance phase: tensor-parallel serving at equal
+    *per-device* KV memory.
+
+    The single-device engine gets a page budget that worst-case
+    reservation fills with exactly ``slots`` live requests.  The sharded
+    engine runs on a (1, ndev) mesh with ``ndev`` times the pages: its
+    KV pool leaves shard the head dim ``1/ndev`` per device, so each
+    device holds exactly the same pool bytes as the single-device leg
+    (asserted on the biggest leaf, not claimed) — yet admission now has
+    ``ndev`` times the page capacity, so it must sustain strictly more
+    live slots (hard-asserted, capacity arithmetic not timing).  Greedy
+    tokens are hard-asserted identical across both legs and the one-shot
+    reference — sharding is a layout change, never a numbers change.
+    Off-accelerator the devices are forced host threads, so tokens/s is
+    reported but not PASS-gated; the capacity and footprint claims are
+    device-count-real either way."""
+    ndev = jax.device_count()
+    if ndev == 1:
+        print("tp-serve phase: one visible device — skipped (run under "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=4 to "
+              "exercise the sharded engine off-accelerator)", flush=True)
+        return []
+    mesh = jax.make_mesh((1, ndev), ("data", "model"))
+    prompts, patches = _prompts(cfg, n_req, prompt_len, seed=41)
+    prompts = np.asarray(prompts)
+    patches = None if patches is None else np.asarray(patches)
+    gens = np.full(n_req, gen)
+    prefill = jax.jit(make_prefill_step(cfg, cache_len=cache_len))
+    serve_step = jax.jit(make_serve_step(cfg))
+    ref = np.asarray(greedy_oneshot(
+        prefill, serve_step, params, jnp.asarray(prompts),
+        None if patches is None else jnp.asarray(patches), gen))
+    total = prompt_len + (cfg.n_patches
+                          if cfg.frontend == "vision_patches" else 0)
+    w = -(-(total + gen - 1) // page_size)      # worst-case pages/request
+    budget = slots * w                 # single-device cap: `slots` live
+
+    def leg(name, steps, mesh_, num_pages):
+        reqs = _mk_requests(prompts, patches, gens)
+        with ServeEngine(cfg, params, slots=n_req, cache_len=cache_len,
+                         mesh=mesh_, umt=True, n_cores=cores,
+                         jit_steps=steps, page_size=page_size,
+                         num_pages=num_pages) as eng:
+            big = max(jax.tree.leaves(eng.kv.cache),
+                      key=lambda x: x.nbytes)
+            per_dev = big.addressable_shards[0].data.nbytes
+            t0 = time.monotonic()
+            _feed(eng.submit, eng.close, reqs, np.zeros(n_req))
+            eng.join()
+            wall = time.monotonic() - t0
+            st = eng.stats()
+        toks = [np.asarray(r.out_tokens, np.int32) for r in reqs]
+        for i, t in enumerate(toks):
+            assert np.array_equal(t, ref[i, :len(t)]), (
+                f"tp-serve token mismatch: {name} request {i} — "
+                "sharding changed the stream")
+        lats = [r.latency for r in reqs]
+        res = ServeResult(
+            name=name, load=0.0, requests=n_req, slots=n_req, wall_s=wall,
+            tokens_s=st["tokens_out"] / wall, occupancy=st["occupancy"],
+            p50_s=_pct(lats, 0.50), p99_s=_pct(lats, 0.99),
+            pages_peak=st.get("pages_used_peak"),
+            pages_capacity=st.get("pages_capacity"),
+            max_live=st["max_live_slots"],
+            prefill_calls=st["prefill_calls"])
+        print(res.row(), flush=True)
+        return res, per_dev, toks
+
+    steps1 = make_jit_steps(cfg, cache_len=cache_len, page_size=page_size)
+    r1, dev1, toks1 = leg("serve_tp_single", steps1, None, budget + 1)
+    steps_tp = make_jit_steps(cfg, mesh, cache_len=cache_len,
+                              page_size=page_size, tp=True)
+    rtp, devtp, tokstp = leg(f"serve_tp_shard{ndev}", steps_tp, mesh,
+                             ndev * (budget + 1))
+    assert [list(t) for t in toks1] == [list(t) for t in tokstp], (
+        "tp-serve legs disagree")            # and both == ref above
+    assert devtp == dev1, (
+        f"per-device KV pool bytes differ: sharded {devtp} vs "
+        f"single-device {dev1} — the head dim is not sharding 1/{ndev}")
+    ok = rtp.max_live > r1.max_live
+    print(f"TP_SERVE,mesh=1x{ndev},page={page_size},"
+          f"pages={budget}->{ndev * budget},per_dev_pool_bytes={dev1},"
+          f"max_live_single={r1.max_live},max_live_tp={rtp.max_live},"
+          f"single_tokens_s={r1.tokens_s:.1f},"
+          f"tp_tokens_s={rtp.tokens_s:.1f},bit_identical=True,"
+          f"{'PASS' if ok else 'FAIL'}", flush=True)
+    print(f"  -> tp-serve equal per-device KV memory ({dev1} pool bytes "
+          f"per device): single-device sustained max_live={r1.max_live} "
+          f"slots, (1,{ndev})-sharded sustained max_live={rtp.max_live} "
+          f"— {'PASS (strictly more live slots)' if ok else 'FAIL'}; "
+          "tokens bit-identical (tokens/s reported, not gated on forced "
+          "host devices)", flush=True)
+    assert ok, (
+        "tensor-parallel serving did not lift live slots at equal "
+        "per-device KV memory")
+    return [r1, rtp]
+
+
 def main(argv=None) -> list[ServeResult]:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-14b")
@@ -984,7 +1098,10 @@ def main(argv=None) -> list[ServeResult]:
                          "unchunked prefill visibly monopolises)")
     ap.add_argument("--skip-phases", action="store_true",
                     help="load sweep only (skip equal-mem and jitter "
-                         "phases)")
+                         "phases); shorthand for --phases load")
+    ap.add_argument("--phases", default=None,
+                    help="comma-separated subset of phases to run: "
+                         f"{','.join(PHASES)} (default: all)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny everything: CI smoke config that still "
                          "executes every phase")
@@ -999,6 +1116,16 @@ def main(argv=None) -> list[ServeResult]:
         # these tiny prompt/gen sizes (auto would cover gen in slack)
         args.page_size = args.page_size or 2
     loads = [float(x) for x in args.loads.split(",")]
+    if args.phases is not None:
+        phases = set(args.phases.split(","))
+        unknown = phases - set(PHASES)
+        if unknown:
+            ap.error(f"unknown phases {sorted(unknown)}; "
+                     f"choose from {','.join(PHASES)}")
+    elif args.skip_phases:
+        phases = {"load"}
+    else:
+        phases = set(PHASES)
 
     cfg = get(args.arch).tiny()
     params = init_params(cfg, jax.random.PRNGKey(0))
@@ -1020,18 +1147,21 @@ def main(argv=None) -> list[ServeResult]:
     # warm every shape (oneshot batch prefill + serve step, and — via
     # throwaway engine legs — the engine's bucketed batched prefills,
     # paged/dense insert + masked decode and the small eager ops) so no
-    # timed leg pays XLA compile
-    wp = None if patches is None else jnp.asarray(patches[:args.slots])
-    cache, logits = prefill(params, jnp.asarray(prompts[:args.slots]), wp)
-    serve_step(params, cache, jnp.argmax(logits, -1).astype(jnp.int32))
-    for st in (steps, steps_dense):
-        warm_engine_shapes(cfg, params, st, prompts, patches,
-                           slots=args.slots, cache_len=cache_len,
-                           cores=args.cores)
+    # timed leg pays XLA compile — only when a timed phase will run
+    # (capacity-asserted phases like tp warm themselves or don't care)
+    if phases & {"load", "donation", "kernel", "equal_mem", "policy"}:
+        wp = None if patches is None else jnp.asarray(patches[:args.slots])
+        cache, logits = prefill(params, jnp.asarray(prompts[:args.slots]),
+                                wp)
+        serve_step(params, cache, jnp.argmax(logits, -1).astype(jnp.int32))
+        for st in (steps, steps_dense):
+            warm_engine_shapes(cfg, params, st, prompts, patches,
+                               slots=args.slots, cache_len=cache_len,
+                               cores=args.cores)
 
     results: list[ServeResult] = []
     burst_ratio = None
-    for load in loads:
+    for load in loads if "load" in phases else []:
         gaps = np.random.default_rng(args.seed).exponential(
             1.0 / load, args.requests)
         runs = {}
@@ -1083,7 +1213,7 @@ def main(argv=None) -> list[ServeResult]:
               f"{'PASS (within 1.2x)' if ok else 'FAIL (worse than 1.2x)'}",
               flush=True)
 
-    if not args.skip_phases:
+    if "donation" in phases:
         # phase: donation A/B — the memcpy win of single-owner KV state
         # (dense and paged, >= 2 loads, aliasing probe asserted)
         results.extend(bench_donation_ab(
@@ -1093,6 +1223,7 @@ def main(argv=None) -> list[ServeResult]:
             repeats=1 if args.smoke else 3,
             steps_on={"paged": steps, "dense": steps_dense}))
 
+    if "kernel" in phases:
         # phase: fused paged-attention kernel A/B — in-kernel block-table
         # walk vs dense-gather decode, tokens hard-asserted identical
         results.extend(bench_paged_kernel_ab(
@@ -1101,6 +1232,7 @@ def main(argv=None) -> list[ServeResult]:
             cores=args.cores, seed=args.seed,
             repeats=1 if args.smoke else 3, steps_off=steps))
 
+    if "equal_mem" in phases:
         # phase: strictly more concurrent slots at equal KV memory
         results.append(bench_equal_memory_slots(
             cfg, params, prefill, serve_step, slots=args.slots,
@@ -1109,6 +1241,7 @@ def main(argv=None) -> list[ServeResult]:
             gen=max(2, args.gen // 4), cores=args.cores,
             n_req=args.requests))
 
+    if "policy" in phases:
         # phase: policy A/B — on-demand paging + preemption-by-eviction
         # vs worst-case reservation (utilisation + eviction storm)
         results.extend(bench_policy_phases(
@@ -1117,6 +1250,7 @@ def main(argv=None) -> list[ServeResult]:
             prompt_len=args.prompt_len, gen=args.gen, cores=args.cores,
             n_req=args.requests, seed=args.seed))
 
+    if "prefix" in phases:
         # phase: shared-prefix KV reuse A/B (ISSUE 7) — radix cache on
         # vs off at equal KV memory, warm trie, hit tokens/s vs cold
         results.extend(bench_prefix_reuse(
@@ -1124,6 +1258,7 @@ def main(argv=None) -> list[ServeResult]:
             gen=args.gen, cores=args.cores, n_req=args.requests,
             page_size=page_size, seed=args.seed))
 
+    if "spec" in phases:
         # phase: speculative decoding A/B (ISSUE 8) — n-gram draft +
         # batched verify vs tick-by-tick, dispatch ledger hard-asserted
         results.extend(bench_spec_decode(
@@ -1132,6 +1267,16 @@ def main(argv=None) -> list[ServeResult]:
             gen=args.gen, cores=args.cores, n_req=args.requests,
             seed=args.seed, repeats=1 if args.smoke else 3))
 
+    if "tp" in phases:
+        # phase: tensor-parallel serving (ISSUE 9) — equal per-device KV
+        # memory, strictly more live slots, tokens bit-identical
+        results.extend(bench_tp_serve(
+            cfg, params, slots=args.slots, cache_len=cache_len,
+            page_size=page_size, prompt_len=args.prompt_len,
+            gen=args.gen, cores=args.cores, n_req=args.requests,
+            seed=args.seed))
+
+    if "jitter" in phases:
         # phase: chunked prefill bounds decode-tick jitter (chunk-exact,
         # token-only frontends: the mix builder has no patch plumbing)
         if cfg.frontend != "vision_patches" and chunkable(

@@ -13,6 +13,38 @@ equivalence).  The engine keeps its slots busy under staggered arrivals
 instead of waiting for the whole batch.
 
     PYTHONPATH=src python examples/serve_batch.py [--arch jamba-v0.1-52b]
+
+The full engine flag surface (``python -m repro.launch.serve``) — every
+knob is a layout/scheduling change, never a tokens change (greedy output
+is bit-identical across all of them, fuzz-tested):
+
+  * ``--page-size N`` / ``--pages N`` — paged KV cache (0 = auto size,
+    < 0 = the dense per-slot layout).  Paging is the substrate for the
+    three flags below; on dense they are rejected or inert.
+  * ``--policy reserve|ondemand`` — worst-case page reservation at
+    admission vs on-demand growth with preemption-by-eviction (paged
+    only; ``ondemand`` admits more but may evict + bit-exactly restore).
+  * ``--prefix-cache auto|on|off`` — radix-trie reuse of shared prompt
+    prefixes over refcounted pages (paged + chunk-exact configs; new
+    requests link cached pages and prefill only their tail).
+  * ``--paged-kernel`` — decode attention via the fused Pallas kernel
+    that walks the block table in-kernel (paged GQA/MLA only; off-TPU it
+    runs interpret-mode, a correctness harness not a speed claim).
+  * ``--spec ngram --spec-k K`` — speculative decoding: n-gram prompt
+    lookup drafts K tokens/slot, one batched dispatch verifies; fewer
+    device dispatches per token, same tokens.
+  * ``--mesh DATA,MODEL`` — device mesh over the visible devices
+    (default 1,N).  With a model axis > 1 the engine serves
+    tensor-parallel: KV pool heads and weight fan-out shard, tables
+    stay replicated, donation still aliases per shard.  Composes with
+    everything above — policy/spec/prefix run host-side against the
+    same block tables, the paged kernel dispatches per-shard — and the
+    stats line reports ``"tp": true``.  Off-accelerator, force devices
+    with ``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
+  * ``--chunk N`` — Sarathi-style chunked prefill (bounds decode-tick
+    jitter under long prompts); ``--no-donate`` — copying legacy cache
+    path (A/B leg); ``--no-umt`` — baseline runtime where a blocked
+    core idles (the paper's A/B).
 """
 import argparse
 

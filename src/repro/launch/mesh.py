@@ -14,3 +14,31 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """1-device mesh for CPU smoke runs (axes present, sizes 1)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_mesh_from_devices(spec: str | None = None):
+    """Largest (data, model) mesh over the visible devices.
+
+    The default puts every device on the model axis — shape ``(1, n)``
+    — which is what tensor-parallel serving wants (cache heads and
+    weight fan-out shard, batch stays whole; see ``ServeEngine`` ``tp=``).
+    A single visible device degenerates to the (1, 1) host mesh, so the
+    axes are always present and sharding annotations never need a
+    no-mesh special case.  ``spec`` — ``"DATA,MODEL"`` — overrides the
+    shape; the sizes must multiply to the visible device count."""
+    n = jax.device_count()
+    if spec is None:
+        shape = (1, n)
+    else:
+        try:
+            shape = tuple(int(p) for p in spec.split(","))
+        except ValueError:
+            shape = ()
+        if len(shape) != 2 or any(p < 1 for p in shape):
+            raise ValueError(
+                f"mesh spec {spec!r}: want 'DATA,MODEL' positive sizes")
+        if shape[0] * shape[1] != n:
+            raise ValueError(
+                f"mesh spec {spec!r}: {shape[0]}x{shape[1]} != "
+                f"{n} visible devices")
+    return jax.make_mesh(shape, ("data", "model"))

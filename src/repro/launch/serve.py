@@ -22,7 +22,7 @@ import numpy as np
 from ..configs import get
 from ..models.lm import init_params
 from ..steps import make_prefill_step, make_serve_step
-from .mesh import make_host_mesh
+from .mesh import make_mesh_from_devices
 
 
 def _prompts(cfg, batch, prompt_len, seed=1):
@@ -117,6 +117,7 @@ def serve_engine(cfg, params, mesh, args):
         "arch": cfg.name,
         "umt": not args.no_umt,
         "page_size": stats["page_size"],
+        "tp": stats["tp"],
         "donate": stats["donate"],
         "paged_kernel": stats["paged_kernel"],
         "policy": stats["policy"],
@@ -204,6 +205,11 @@ def serve(argv=None):
     ap.add_argument("--spec-k", type=int, default=4,
                     help="engine: draft window length per slot per tick "
                          "(speculation depth; --spec only)")
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="device mesh shape over the visible devices "
+                         "(default: 1,N — every device on the model "
+                         "axis, tensor-parallel serving; the sizes must "
+                         "multiply to the device count)")
     ap.add_argument("--prefix-cache", choices=("auto", "on", "off"),
                     default="auto",
                     help="engine: shared-prefix KV reuse (radix cache "
@@ -218,7 +224,12 @@ def serve(argv=None):
     cfg = get(args.arch)
     if args.tiny:
         cfg = cfg.tiny()
-    mesh = make_host_mesh() if jax.device_count() == 1 else None
+    # always mesh over whatever is visible: one device gives the (1, 1)
+    # host mesh (annotations present, no sharding), several give (1, n)
+    # — the engine auto-enables tensor-parallel serving on the model
+    # axis (the old `device_count == 1` special case left multi-device
+    # runs with no mesh at all, so they never sharded anything)
+    mesh = make_mesh_from_devices(args.mesh)
     params = init_params(cfg, jax.random.PRNGKey(0))
 
     if args.mode == "oneshot":

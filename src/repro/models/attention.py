@@ -17,12 +17,34 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
 from ..kernels import paged_decode_attention, paged_mla_decode_attention
-from ..sharding import shard
+from ..sharding import axis_size, current_mesh, resolved_axes, shard
 from .layers import (apply_rope, page_gather, page_scatter,
                      page_scatter_window, rms_norm)
 
 NEG_INF = -1e30
+
+
+def _tp_kernel_axes(*head_counts: int) -> tuple[str, ...] | None:
+    """Mesh axes for the per-shard paged-kernel dispatch, or ``None`` for
+    the single-shard call.  The kernel is head-parallel, so a tensor-
+    parallel pool (heads on the mesh, sequence replicated — TP_SERVE_RULES)
+    dispatches one kernel per model shard via ``shard_map``; the legacy
+    decode layout (seq_shard on the mesh) and non-dividing head counts
+    (the constraint would drop or pad the axis) keep the plain call."""
+    mesh = current_mesh()
+    if mesh is None:
+        return None
+    if resolved_axes("seq_shard"):
+        return None                      # pool is sequence-sharded (legacy)
+    axes = resolved_axes("kv_heads")
+    n = axis_size(mesh, axes)
+    if n <= 1 or any(h % n for h in head_counts):
+        return None
+    return axes
 
 
 def paged_leaf(pages, window, cache_len=None):
@@ -151,8 +173,8 @@ def decode_attention(q, k_cache, v_cache, pos, *, window=None, scale=None):
     """
     b, _, h, dh = q.shape
     sc = k_cache.shape[1]
-    kf = shard(_expand_kv(k_cache, h), "batch", "seq_shard", None, None)
-    vf = shard(_expand_kv(v_cache, h), "batch", "seq_shard", None, None)
+    kf = shard(_expand_kv(k_cache, h), "batch", "seq_shard", "heads", None)
+    vf = shard(_expand_kv(v_cache, h), "batch", "seq_shard", "heads", None)
     slots = jnp.arange(sc)
     per_slot = jnp.ndim(pos) == 1
     pp = pos[:, None] if per_slot else pos          # (B,1) | scalar
@@ -169,7 +191,7 @@ def decode_attention(q, k_cache, v_cache, pos, *, window=None, scale=None):
     if _BASELINE:
         probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
         return jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
-    scores = shard(scores, "batch", None, None, "seq_shard")
+    scores = shard(scores, "batch", "heads", None, "seq_shard")
     m = jnp.max(scores, axis=-1, keepdims=True)          # reduce over shard
     p = jnp.exp(scores - m)
     l = jnp.sum(p, axis=-1, keepdims=True)               # reduce over shard
@@ -194,8 +216,8 @@ def verify_attention(q, k_cache, v_cache, pos, *, scale=None):
     property)."""
     b, s, h, dh = q.shape
     sc = k_cache.shape[1]
-    kf = shard(_expand_kv(k_cache, h), "batch", "seq_shard", None, None)
-    vf = shard(_expand_kv(v_cache, h), "batch", "seq_shard", None, None)
+    kf = shard(_expand_kv(k_cache, h), "batch", "seq_shard", "heads", None)
+    vf = shard(_expand_kv(v_cache, h), "batch", "seq_shard", "heads", None)
     qp = pos[:, None] + jnp.arange(s)                      # (B,S)
     valid = jnp.arange(sc)[None, None, :] <= qp[:, :, None]  # (B,S,T)
     bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)[:, None]
@@ -205,7 +227,7 @@ def verify_attention(q, k_cache, v_cache, pos, *, scale=None):
     if _BASELINE:
         probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
         return jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
-    scores = shard(scores, "batch", None, None, "seq_shard")
+    scores = shard(scores, "batch", "heads", None, "seq_shard")
     m = jnp.max(scores, axis=-1, keepdims=True)
     p = jnp.exp(scores - m)
     l = jnp.sum(p, axis=-1, keepdims=True)
@@ -239,7 +261,7 @@ def gqa_param_shapes(cfg):
 def gqa_cache_shapes(cfg, spec, batch, seq):
     sc = min(seq, spec.window) if spec.window else seq
     kv = (batch, sc, cfg.n_kv_heads, cfg.head_dim)
-    ax = ("batch", "seq_shard", None, None)
+    ax = ("batch", "seq_shard", "kv_heads", None)
     return {"k": (kv, ax), "v": (kv, ax)}
 
 
@@ -330,20 +352,38 @@ def gqa_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None,
                 # in-kernel and reads pages in place — page_gather's
                 # dense slot-major copy never exists
                 pv = pos if jnp.ndim(pos) == 1 else jnp.full((b,), pos)
-                out = paged_decode_attention(q, kc, vc, table, pv,
-                                             page_size=ps, window=w)
+                axes = _tp_kernel_axes(h, hkv)
+                if axes:
+                    # tensor-parallel pool: one kernel per model shard.
+                    # Heads are kv-head-major contiguous, so an even
+                    # head split keeps every query head on the shard
+                    # holding its KV group — the kernel's group math is
+                    # local and per-head outputs are bit-identical to
+                    # the single-shard call.
+                    hspec = P(None, None, axes, None)
+                    out = shard_map(
+                        functools.partial(paged_decode_attention,
+                                          page_size=ps, window=w),
+                        mesh=current_mesh(),
+                        in_specs=(hspec, hspec, hspec, P(None, None),
+                                  P(None)),
+                        out_specs=hspec, check_rep=False,
+                    )(q, kc, vc, table, pv)
+                else:
+                    out = paged_decode_attention(q, kc, vc, table, pv,
+                                                 page_size=ps, window=w)
             else:
                 kd = shard(page_gather(kc, table, ps),
-                           "batch", "seq_shard", None, None)
+                           "batch", "seq_shard", "kv_heads", None)
                 vd = shard(page_gather(vc, table, ps),
-                           "batch", "seq_shard", None, None)
+                           "batch", "seq_shard", "kv_heads", None)
                 out = decode_attention(q, kd, vd, pos, window=w)
         else:
             idx = jnp.mod(pos, kc.shape[1]) if w is not None else pos
             kc = _cache_update(kc, k, idx)
             vc = _cache_update(vc, v, idx)
-            kc = shard(kc, "batch", "seq_shard", None, None)
-            vc = shard(vc, "batch", "seq_shard", None, None)
+            kc = shard(kc, "batch", "seq_shard", "kv_heads", None)
+            vc = shard(vc, "batch", "seq_shard", "kv_heads", None)
             out = decode_attention(q, kc, vc, pos, window=w)
         new_cache = {"k": kc, "v": vc}
     elif mode == "verify":
@@ -364,15 +404,15 @@ def gqa_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None,
             kc = page_scatter_window(kc, table, ps, pos, k, n_tok)
             vc = page_scatter_window(vc, table, ps, pos, v, n_tok)
             kd = shard(page_gather(kc, table, ps),
-                       "batch", "seq_shard", None, None)
+                       "batch", "seq_shard", "kv_heads", None)
             vd = shard(page_gather(vc, table, ps),
-                       "batch", "seq_shard", None, None)
+                       "batch", "seq_shard", "kv_heads", None)
             out = verify_attention(q, kd, vd, pos)
         else:
             kc = _cache_update_window(kc, k, pos, n_tok)
             vc = _cache_update_window(vc, v, pos, n_tok)
-            kc = shard(kc, "batch", "seq_shard", None, None)
-            vc = shard(vc, "batch", "seq_shard", None, None)
+            kc = shard(kc, "batch", "seq_shard", "kv_heads", None)
+            vc = shard(vc, "batch", "seq_shard", "kv_heads", None)
             out = verify_attention(q, kc, vc, pos)
         new_cache = {"k": kc, "v": vc}
     else:
@@ -393,8 +433,8 @@ def gqa_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None,
             start = (0, pos) + (0,) * (kc.ndim - 2)
             kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), start)
             vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), start)
-            kc = shard(kc, "batch", "seq_shard", None, None)
-            vc = shard(vc, "batch", "seq_shard", None, None)
+            kc = shard(kc, "batch", "seq_shard", "kv_heads", None)
+            vc = shard(vc, "batch", "seq_shard", "kv_heads", None)
             # static extent bucket: attend only the prefix that can hold
             # valid keys — any extent >= pos+s is bit-exact, and a
             # per-chunk bucket keeps chunked-prefill FLOPs at the
@@ -417,8 +457,8 @@ def gqa_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None,
             else:
                 kc, vc = _pad_seq(k, cache_len), _pad_seq(v, cache_len)
             new_cache = {
-                "k": shard(kc, "batch", "seq_shard", None, None),
-                "v": shard(vc, "batch", "seq_shard", None, None),
+                "k": shard(kc, "batch", "seq_shard", "kv_heads", None),
+                "v": shard(vc, "batch", "seq_shard", "kv_heads", None),
             }
         else:
             out = full_attention(q, k, v, window=spec.window)
@@ -512,9 +552,25 @@ def mla_apply(x, p, cfg, spec, *, mode, pos, cache=None, cache_len=None,
             # form's V is its K, so the kernel returns the attended
             # latent and wv_b applies outside)
             pv = pos if per_slot else jnp.full((b,), pos)
-            lat = paged_mla_decode_attention(q_lat, q_rope, cc, kr,
-                                             table, pv, page_size=ps,
-                                             scale=scale)
+            axes = _tp_kernel_axes(h)
+            if axes:
+                # tensor-parallel MLA: the latent pools carry no head
+                # dim (replicated); only the query splits, one kernel
+                # per model shard over its local query heads
+                hspec = P(None, None, axes, None)
+                rep3 = P(None, None, None)
+                lat = shard_map(
+                    functools.partial(paged_mla_decode_attention,
+                                      page_size=ps, scale=scale),
+                    mesh=current_mesh(),
+                    in_specs=(hspec, hspec, rep3, rep3, P(None, None),
+                              P(None)),
+                    out_specs=hspec, check_rep=False,
+                )(q_lat, q_rope, cc, kr, table, pv)
+            else:
+                lat = paged_mla_decode_attention(q_lat, q_rope, cc, kr,
+                                                 table, pv, page_size=ps,
+                                                 scale=scale)
         else:
             scores = (jnp.einsum("bshr,btr->bhst", q_lat, cd) +
                       jnp.einsum("bshr,btr->bhst", q_rope, kd))

@@ -80,11 +80,14 @@ import time
 import numpy as np
 
 from ..core import UMTRuntime, io
-from ..steps import (chunkable, init_cache, make_batched_insert_step,
-                     make_decode_step, make_prefill_chunk_step,
-                     make_prefill_step, make_prefix_gather_step,
-                     make_serve_step, make_verify_step, speculatable)
-from .kvstate import KVState, alias_safe
+from ..sharding import logical_sharding
+from ..steps import (TP_SERVE_RULES, chunkable, init_cache,
+                     init_paged_slot_cache, init_slot_cache,
+                     make_batched_insert_step, make_decode_step,
+                     make_prefill_chunk_step, make_prefill_step,
+                     make_prefix_gather_step, make_serve_step,
+                     make_verify_step, speculatable)
+from .kvstate import KVState, alias_safe, cache_tree_shardings
 from .pager import GARBAGE_PAGE
 from .policy import SchedulerPolicy, SlotView, make_policy
 from .prefix import PrefixCache
@@ -93,8 +96,9 @@ from .request import Request, RequestQueue
 try:  # jax is present everywhere we run; guard only for doc tooling
     import jax
     import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
 except ImportError:  # pragma: no cover
-    jax = jnp = None
+    jax = jnp = NamedSharding = P = None
 
 
 def percentile(xs, q):
@@ -111,9 +115,38 @@ def auto_page_size(cache_len: int, cap: int = 8) -> int:
                if cache_len % d == 0)
 
 
+def _tp_shardings(cfg, mesh, cache_len: int, page_size: int | None):
+    """Output-sharding trees for the tensor-parallel serve jits: the
+    slot pool / paged pool (``pool``), a prefill row cache (``row``) and
+    a fully-replicated leaf (``rep`` — tokens and logits, which the
+    model-axis all-reduce already materialises on every device).
+
+    Donation aliases a sharded cache leaf only when the step's *output*
+    sharding equals the (committed) input sharding, so every step's
+    cache output is pinned to the exact per-leaf shardings ``KVState``
+    commits its pool with — GSPMD never gets to re-decide a layout per
+    step and silently break the alias.  ``NamedSharding`` is
+    shape-independent, so nominal slots/num_pages hints are enough here:
+    only the head/conv dims (taken from ``cfg``) decide the strict
+    per-leaf resolution."""
+    dt = jnp.dtype(cfg.dtype)
+    if page_size is None:
+        pool = jax.eval_shape(
+            lambda: init_slot_cache(cfg, 1, cache_len, dt))
+    else:
+        pool = jax.eval_shape(
+            lambda: init_paged_slot_cache(cfg, 1, cache_len, dt,
+                                          page_size, 2))
+    rows = jax.eval_shape(lambda: init_cache(cfg, 1, cache_len, dt))
+    return {"rep": NamedSharding(mesh, P()),
+            "pool": cache_tree_shardings(pool, mesh),
+            "row": cache_tree_shardings(rows, mesh)}
+
+
 def make_jit_steps(cfg, mesh=None, cache_len: int = 64, *,
                    page_size: int | None = None, chunk: bool | None = None,
-                   donate: bool = True, paged_kernel: bool = False):
+                   donate: bool = True, paged_kernel: bool = False,
+                   tp: bool = False):
     """The engine's jitted steps, built once — pass as ``jit_steps`` to
     several ``ServeEngine`` instances (benchmark A/B legs) so XLA compiles
     each step a single time per process.  Returns a dict carrying the
@@ -139,49 +172,73 @@ def make_jit_steps(cfg, mesh=None, cache_len: int = 64, *,
     ``paged_kernel=True`` builds the decode step on the fused
     paged-attention Pallas kernel (pages read in place, no dense
     ``page_gather`` per tick); default False keeps the dense-gather leg
-    — the A/B baseline and bit-exactness oracle."""
+    — the A/B baseline and bit-exactness oracle.
+
+    ``tp=True`` builds every step tensor-parallel over ``mesh``'s model
+    axis: cache head dims sharded per device (``repro.steps.
+    TP_SERVE_RULES``), block tables / token rows / positions replicated,
+    and each step's outputs pinned (``out_shardings``) to the same
+    per-leaf shardings ``KVState`` commits its pool with — so donation
+    keeps aliasing every sharded leaf in place, now per shard.  Greedy
+    tokens stay bit-identical to the single-device engine (tested)."""
     if paged_kernel and page_size is None:
         raise ValueError("paged_kernel=True needs a paged cache "
                          "(page_size set)")
+    if tp and mesh is None:
+        raise ValueError("tp=True needs a (data, model) mesh")
     if chunk is None:
         chunk = chunkable(cfg, cache_len)
-    ins = jax.jit(make_batched_insert_step(
-        cfg, mesh, cache_len=cache_len, page_size=page_size),
-        donate_argnums=(0,) if donate else ())
-    dec = jax.jit(make_decode_step(
+    sh = _tp_shardings(cfg, mesh, cache_len, page_size) if tp else None
+    rep = sh["rep"] if sh else None
+    pool_sh = sh["pool"] if sh else None
+    row_sh = sh["row"] if sh else None
+
+    def _jit(fn, out, **kw):
+        if sh is not None:
+            kw["out_shardings"] = out
+        return jax.jit(fn, **kw)
+
+    ins = _jit(make_batched_insert_step(
+        cfg, mesh, cache_len=cache_len, page_size=page_size, tp=tp),
+        pool_sh, donate_argnums=(0,) if donate else ())
+    dec = _jit(make_decode_step(
         cfg, mesh, cache_len=cache_len, page_size=page_size,
-        paged_kernel=paged_kernel),
-        donate_argnums=(1,) if donate else ())
+        paged_kernel=paged_kernel, tp=tp),
+        (rep, pool_sh), donate_argnums=(1,) if donate else ())
     return {
         "cache_len": cache_len,
         "page_size": page_size,
         "donate": donate,
         "paged_kernel": paged_kernel,
-        "prefill": jax.jit(make_prefill_step(cfg, mesh,
-                                             cache_len=cache_len)),
+        "tp": tp,
+        "prefill": _jit(make_prefill_step(cfg, mesh, cache_len=cache_len,
+                                          tp=tp), (row_sh, rep)),
         "insert": ins,
         "decode": dec,
         # decode-replay restore (see ServeEngine._replay_generated) —
         # jit is lazy, so this compiles only if an eviction on a
         # non-extent-invariant config actually restores through it
-        "replay": jax.jit(make_serve_step(cfg, mesh)),
-        "chunk": (jax.jit(make_prefill_chunk_step(cfg, mesh, cache_len),
-                          donate_argnums=(1,) if donate else (),
-                          static_argnames=("attn_extent", "want_logits"))
+        "replay": _jit(make_serve_step(cfg, mesh, tp=tp), (rep, row_sh)),
+        "chunk": (_jit(make_prefill_chunk_step(cfg, mesh, cache_len,
+                                               tp=tp),
+                       (row_sh, rep),
+                       donate_argnums=(1,) if donate else (),
+                       static_argnames=("attn_extent", "want_logits"))
                   if chunk else None),
         # prefix-cache hit path (pure read of the pool — never donated):
         # gathers a matched prefix's shared pages into a fresh B=1 row
         # cache that seeds the tail chunk prefill
-        "gather": (jax.jit(make_prefix_gather_step(
-            cfg, mesh, cache_len=cache_len, page_size=page_size))
+        "gather": (_jit(make_prefix_gather_step(
+            cfg, mesh, cache_len=cache_len, page_size=page_size, tp=tp),
+            row_sh)
             if page_size is not None and chunkable(cfg, cache_len)
             else None),
         # speculative-decode verify (draft-and-verify multi-token decode,
         # see ServeEngine ``spec=``) — jit is lazy, so an unused verify
         # step costs nothing; None where the config cannot be bit-exact
-        "verify": (jax.jit(make_verify_step(
-            cfg, mesh, cache_len=cache_len, page_size=page_size),
-            donate_argnums=(1,) if donate else ())
+        "verify": (_jit(make_verify_step(
+            cfg, mesh, cache_len=cache_len, page_size=page_size, tp=tp),
+            (rep, pool_sh), donate_argnums=(1,) if donate else ())
             if speculatable(cfg, cache_len) else None),
     }
 
@@ -227,6 +284,20 @@ class ServeEngine:
         copy never materialises).  Default False keeps the gather+dense
         leg — the A/B baseline and bit-exactness oracle.  Requires a
         paged engine; must match ``jit_steps`` when both are given.
+    tp : bool | None, optional
+        Tensor-parallel serving: shard the decode/prefill/verify jits
+        over ``mesh``'s model axis — every cache leaf with a head dim is
+        split across the model devices (``repro.steps.TP_SERVE_RULES``,
+        strict: a head count the axis cannot divide replicates), weights
+        are sharded by their logical axes, and all host-side state
+        (token rows, active masks, block tables, positions) is committed
+        replicated.  Per-device KV bytes drop by the model-axis size, so
+        the same per-device memory sustains more live slots.  Donation
+        still aliases every sharded leaf in place (out_shardings pinned
+        to the input layout) and greedy tokens stay bit-identical to the
+        single-device engine.  Default ``None`` auto-enables exactly
+        when ``mesh`` has a model axis larger than one; must match
+        ``jit_steps`` when both are given.
     policy : SchedulerPolicy | str | None, optional
         The decision layer (see :mod:`repro.serve.policy`): None/"reserve"
         keeps worst-case page reservation at admission; "ondemand" turns
@@ -287,7 +358,8 @@ class ServeEngine:
                  prefill_chunk: int | None = None,
                  max_prefill_batch: int | None = None,
                  sync_ticks: bool = False, donate: bool | None = None,
-                 paged_kernel: bool | None = None, policy=None,
+                 paged_kernel: bool | None = None,
+                 tp: bool | None = None, policy=None,
                  prefix_cache: bool | str | None = None,
                  spec: str | None = None, spec_k: int = 4):
         self.cfg = cfg
@@ -325,6 +397,11 @@ class ServeEngine:
                 "jit_steps were built for paged_kernel="
                 f"{steps_pk}, engine asked for paged_kernel={paged_kernel}")
             paged_kernel = steps_pk
+            steps_tp = jit_steps.get("tp", False)
+            assert tp is None or tp == steps_tp, (
+                f"jit_steps were built for tp={steps_tp}, "
+                f"engine asked for tp={tp}")
+            tp = steps_tp
         elif page_size == "auto":
             page_size = auto_page_size(cache_len)
         self.page_size: int | None = page_size
@@ -334,6 +411,26 @@ class ServeEngine:
         if self.paged_kernel and not self.paged:
             raise ValueError("paged_kernel=True needs a paged engine "
                              "(page_size is None here)")
+        # tensor-parallel serving auto-enables exactly when the mesh has
+        # a model axis to shard over; a 1x1 host mesh (or no mesh) keeps
+        # the single-device layout bit-for-bit
+        if tp is None:
+            tp = mesh is not None and mesh.shape.get("model", 1) > 1
+        self.tp = bool(tp)
+        if self.tp and mesh is None:
+            raise ValueError("tp=True needs a (data, model) mesh")
+        # XLA:CPU executes a sharded computation by fanning per-device
+        # participant work onto one shared intra-op pool and
+        # rendezvousing the participants inside each collective; two
+        # sharded computations in flight can split the pool across
+        # their rendezvous and starve each other (observed: concurrent
+        # TP prefill rounds parked forever in AllReduce "waiting for
+        # all participants").  Real accelerator backends order launches
+        # per device stream, so only the (forced-host) CPU substrate
+        # serializes: one sharded launch at a time, run to completion
+        # under _dev_lock (see _dispatch).
+        self._tp_serial = self.tp and jax.default_backend() == "cpu"
+        self._dev_lock = threading.Lock()
         self.policy = make_policy(policy)
         if self.policy.on_demand and not self.paged:
             raise ValueError(
@@ -359,12 +456,26 @@ class ServeEngine:
             jit_steps = make_jit_steps(cfg, mesh, cache_len,
                                        page_size=page_size,
                                        donate=self.donate,
-                                       paged_kernel=self.paged_kernel)
+                                       paged_kernel=self.paged_kernel,
+                                       tp=self.tp)
+        # fallback jits (an external jit_steps dict may omit entries)
+        # must build with the same tp/out_shardings as make_jit_steps's
+        tp_sh = (_tp_shardings(cfg, mesh, cache_len, page_size)
+                 if self.tp else None)
+        rep_sh = tp_sh["rep"] if tp_sh else None
+        pool_sh = tp_sh["pool"] if tp_sh else None
+        row_sh = tp_sh["row"] if tp_sh else None
+
+        def _fb_jit(fn, out, **kw):
+            if tp_sh is not None:
+                kw["out_shardings"] = out
+            return jax.jit(fn, **kw)
+
         self.prefill = jit_steps["prefill"]
         self.insert = jit_steps["insert"]
         self.decode = jit_steps["decode"]
-        self.replay = jit_steps.get("replay") or jax.jit(
-            make_serve_step(cfg, mesh))
+        self.replay = jit_steps.get("replay") or _fb_jit(
+            make_serve_step(cfg, mesh, tp=self.tp), (rep_sh, row_sh))
         self.chunk = jit_steps.get("chunk")
         # restore shape after an eviction: one prefill over
         # prompt+generated where prefill is extent-invariant (the
@@ -373,8 +484,9 @@ class ServeEngine:
         # otherwise (bit-exact by construction, a tick per token)
         self._restore_prefill = chunkable(cfg, cache_len)
         if self._restore_prefill and self.chunk is None:
-            self.chunk = jax.jit(
-                make_prefill_chunk_step(cfg, mesh, cache_len),
+            self.chunk = _fb_jit(
+                make_prefill_chunk_step(cfg, mesh, cache_len, tp=self.tp),
+                (row_sh, rep_sh),
                 donate_argnums=(1,) if self.donate else (),
                 static_argnames=("attn_extent", "want_logits"))
         # speculative decoding: spec mode resolves to a drafter (a policy
@@ -393,9 +505,10 @@ class ServeEngine:
                     "config (no MoE, no SSM, no SWA ring shorter than "
                     "cache_len) and a scalar greedy-token frontend")
             if self.verify is None:
-                self.verify = jax.jit(
+                self.verify = _fb_jit(
                     make_verify_step(cfg, mesh, cache_len=cache_len,
-                                     page_size=page_size),
+                                     page_size=page_size, tp=self.tp),
+                    (rep_sh, pool_sh),
                     donate_argnums=(1,) if self.donate else ())
             self.drafter = self.policy.spec_drafter(self, self.spec_mode)
         # chunk width for prefill-replay restores when the engine has no
@@ -428,7 +541,8 @@ class ServeEngine:
             raise ValueError(f"prefix_cache={prefix_cache!r}: pick "
                              "True/'on', False/'off' or None/'auto'")
 
-        self._params = None if callable(params) else params
+        self._params = (None if callable(params)
+                        else self._shard_params(params))
         self._params_fn = params if callable(params) else None
         self._params_ready = threading.Event()
         self._load_exc: BaseException | None = None
@@ -440,7 +554,7 @@ class ServeEngine:
         # tables + page free-list): every rebind goes through kv.commit,
         # every buffer a pending dispatch may read is pinned in kv
         self.kv = KVState(cfg, slots, cache_len, dt, page_size=page_size,
-                          num_pages=num_pages)
+                          num_pages=num_pages, mesh=mesh, tp=self.tp)
         self.pager = self.kv.pager
         self.pages_per_slot = self.kv.pages_per_slot
         # prefix trie + its gather jit; the pool lock orders the gather
@@ -452,9 +566,10 @@ class ServeEngine:
                        if self._use_prefix else None)
         self.gather = None
         if self.prefix is not None:
-            self.gather = jit_steps.get("gather") or jax.jit(
+            self.gather = jit_steps.get("gather") or _fb_jit(
                 make_prefix_gather_step(cfg, mesh, cache_len=cache_len,
-                                        page_size=page_size))
+                                        page_size=page_size, tp=self.tp),
+                row_sh)
         self._pool_lock = threading.Lock()
         extra = ((cfg.n_codebooks,) if cfg.frontend == "audio_codebooks"
                  else ())
@@ -465,9 +580,10 @@ class ServeEngine:
         # jnp.array (a copy): asarray may alias the numpy buffer, which
         # async dispatch could then read *after* a later host-side
         # mutation.
-        self._tokens = jnp.zeros((slots, 1) + extra, jnp.int32)
+        self._tokens = self.kv.to_dev(np.zeros((slots, 1) + extra,
+                                               np.int32))
         self._active = np.zeros((slots,), bool)
-        self._active_dev = jnp.array(self._active)
+        self._active_dev = self.kv.to_dev(self._active)
         self._slot_req: list[Request | None] = [None] * slots
         # host-side per-slot scheduling state the policy decides over:
         # the cache position the next tick will write (drives on-demand
@@ -572,6 +688,41 @@ class ServeEngine:
                 ps, rows, tok, scalar)
             alias_safe(rows, out_c, "chunk")
 
+    def _shard_params(self, params):
+        """Commit the weights to their logical-axis shardings (heads /
+        ff fan-out / vocab on the model axis, strict — non-dividing dims
+        replicate); identity when not tensor-parallel."""
+        if not self.tp or params is None:
+            return params
+        from ..models.lm import param_logical_axes
+
+        sh = jax.tree_util.tree_map(
+            lambda p, a: logical_sharding(p.shape, a, self.mesh,
+                                          TP_SERVE_RULES, strict=True),
+            params, param_logical_axes(self.cfg))
+        return jax.device_put(params, sh)
+
+    def _dev_rows(self, rows):
+        """Commit a fresh host-built row cache to its per-leaf TP
+        shardings (the chunk jit donates it — aliasing needs the input
+        already laid out); identity when not tensor-parallel."""
+        if not self.tp:
+            return rows
+        return jax.device_put(rows, self.kv.cache_shardings(rows))
+
+    def _dispatch(self, step, *args, **kw):
+        """Run one jitted engine step.  Tensor-parallel on the CPU
+        backend serializes — at most one sharded computation in flight,
+        completed before the lock releases (collective-rendezvous
+        starvation, see ``_tp_serial`` in ``__init__``); every other
+        configuration is a plain async dispatch."""
+        if not self._tp_serial:
+            return step(*args, **kw)
+        with self._dev_lock:
+            out = step(*args, **kw)
+            jax.block_until_ready(out)
+            return out
+
     # ------------------------------------------------------------ lifecycle
     def start(self):
         assert not self._started
@@ -614,7 +765,7 @@ class ServeEngine:
     # ------------------------------------------------------------ the tasks
     def _load_params(self):
         try:
-            self._params = self._params_fn()
+            self._params = self._shard_params(self._params_fn())
         except BaseException as e:     # noqa: BLE001 — re-raised by prefill
             self._load_exc = e
             raise
@@ -773,8 +924,8 @@ class ServeEngine:
             if patches is not None:
                 patches = np.concatenate(
                     [patches, np.repeat(patches[-1:], bpad - bg, axis=0)])
-        tj = jnp.asarray(toks)
-        pj = None if patches is None else jnp.asarray(patches)
+        tj = self.kv.to_dev(toks)
+        pj = None if patches is None else self.kv.to_dev(patches)
 
         if self.chunk is not None and grp[0].resume \
                 and grp[0].restore_tokens is not None:
@@ -789,8 +940,9 @@ class ServeEngine:
             chunk = (self.policy.chunk_len(self, grp[0].total_len)
                      if self.chunk is not None else None)
         if chunk is not None:
-            st = {"rows_cache": init_cache(self.cfg, bpad, self.cache_len,
-                                           jnp.dtype(self.cfg.dtype)),
+            st = {"rows_cache": self._dev_rows(
+                      init_cache(self.cfg, bpad, self.cache_len,
+                                 jnp.dtype(self.cfg.dtype))),
                   "off": 0, "c0": 0, "first": True, "chunks": 0,
                   "chunk": int(chunk), "unaccounted": list(grp)}
             for r in grp:
@@ -804,7 +956,8 @@ class ServeEngine:
                 st["unaccounted"] = []
                 raise
             return
-        rows_cache, logits = self.prefill(self._params, tj, pj)
+        rows_cache, logits = self._dispatch(self.prefill, self._params,
+                                            tj, pj)
         self._account_prefilled(grp, remaining, rows_cache, logits)
 
     def _try_prefix_prefill(self, req, remaining) -> bool:
@@ -840,10 +993,12 @@ class ServeEngine:
             # orders this dispatch before any donating decode/insert of
             # the same cache version — FIFO device execution then runs
             # the gather before the donating step recycles the buffers
-            trow_dev, pos_dev = jnp.array(trow), jnp.int32(m.tokens)
+            trow_dev, pos_dev = kv.to_dev(trow), kv.to_dev(
+                np.int32(m.tokens))
             with self._pool_lock:
                 src = kv.cache
-                rows_cache = self.gather(src, trow_dev, pos_dev)
+                rows_cache = self._dispatch(self.gather, src, trow_dev,
+                                            pos_dev)
             jax.block_until_ready(rows_cache["pos"])
             del src, trow_dev, pos_dev
             # fork content copied: drop its hold (the matched full
@@ -862,7 +1017,7 @@ class ServeEngine:
         st = {"rows_cache": rows_cache, "off": m.tokens, "c0": m.tokens,
               "first": False, "chunks": 0,
               "chunk": int(self.restore_chunk), "unaccounted": [req]}
-        tj = jnp.asarray(toks[None])
+        tj = self.kv.to_dev(toks[None])
         try:
             self.rt.submit(self._prefill_chunk_task, [req], tj, None, st,
                            name=f"serve.prefill.hit:{req.rid}@{m.tokens}")
@@ -898,9 +1053,10 @@ class ServeEngine:
             # pending dispatch could read their recycled buffers (the
             # documented backend bug — same rule as kv.pin in
             # _do_inserts)
-            chunk_toks, off_dev = tj[:, c0:c1], jnp.int32(off)
-            rows_cache, logits = self.chunk(
-                self._params, old_rows, chunk_toks, off_dev,
+            chunk_toks, off_dev = tj[:, c0:c1], self.kv.to_dev(
+                np.int32(off))
+            rows_cache, logits = self._dispatch(
+                self.chunk, self._params, old_rows, chunk_toks, off_dev,
                 pj if first else None, attn_extent=ext,
                 want_logits=c1 >= plen)
             st.update(rows_cache=rows_cache, off=covered, c0=c1,
@@ -1027,10 +1183,11 @@ class ServeEngine:
         cache, nxts = rows_cache, []
         pins = []               # chain versions + fed tokens: keep refs
         for k in range(len(toks) - 1):
-            fed = jnp.asarray(
+            fed = self.kv.to_dev(
                 np.asarray(toks[k]).reshape((1, 1) + extra))
             pins.append((cache, fed))
-            nxt, cache = self.replay(self._params, cache, fed)
+            nxt, cache = self._dispatch(self.replay, self._params, cache,
+                                        fed)
             nxts.append(nxt)
         # one sync for the whole chain (dispatch stays pipelined), then
         # verify every replayed argmax against the recorded stream
@@ -1125,7 +1282,7 @@ class ServeEngine:
         """Refresh the device active mask from the host one, pinning the
         displaced version (same rule as :meth:`_rebind_tokens`)."""
         self.kv.pin(self._active_dev)
-        self._active_dev = jnp.array(self._active)
+        self._active_dev = self.kv.to_dev(self._active)
 
     def _do_inserts(self):
         """Admit prefilled rows into free slots, strictly head-first
@@ -1184,7 +1341,8 @@ class ServeEngine:
             assert not self._active[s], \
                 f"policy picked a live slot {s} for admission"
             kv = self.kv
-            row_dev, slot_dev = jnp.int32(row), jnp.int32(s)
+            row_dev, slot_dev = kv.to_dev(np.int32(row)), \
+                kv.to_dev(np.int32(s))
             # dispatch temporaries the pending insert reads whose Python
             # refs drop at the end of this iteration: pin until a sync
             kv.pin(rows_cache, t0, row_dev, slot_dev)
@@ -1200,15 +1358,17 @@ class ServeEngine:
                             and not self.pager.is_cached(pid), (
                             f"freshly allocated page {pid} is shared")
                 with self._pool_lock:
-                    new_cache = self.insert(kv.cache, rows_cache,
-                                            row_dev, slot_dev, table_row)
+                    new_cache = self._dispatch(self.insert, kv.cache,
+                                               rows_cache, row_dev,
+                                               slot_dev, table_row)
                     # donated: the displaced version was consumed by the
                     # insert (never pinned); copied: commit pins it
                     kv.commit(new_cache, donated=self.donate)
             else:
                 with self._pool_lock:
-                    new_cache = self.insert(kv.cache, rows_cache,
-                                            row_dev, slot_dev)
+                    new_cache = self._dispatch(self.insert, kv.cache,
+                                               rows_cache, row_dev,
+                                               slot_dev)
                     kv.commit(new_cache, donated=self.donate)
             self._rebind_tokens(self._tokens.at[s].set(t0[row]))
             self._active[s] = True
@@ -1409,12 +1569,12 @@ class ServeEngine:
                     f"page {pid}")
         with self._pool_lock:
             if self.paged:
-                new_tokens, new_cache = self.decode(
-                    self._params, kv.cache, self._tokens,
+                new_tokens, new_cache = self._dispatch(
+                    self.decode, self._params, kv.cache, self._tokens,
                     self._active_dev, kv.table_dev)
             else:
-                new_tokens, new_cache = self.decode(
-                    self._params, kv.cache, self._tokens,
+                new_tokens, new_cache = self._dispatch(
+                    self.decode, self._params, kv.cache, self._tokens,
                     self._active_dev)
             kv.commit(new_cache, donated=self.donate)
         self.stats_decode_dispatches += 1
@@ -1550,17 +1710,18 @@ class ServeEngine:
             toks[s, :len(win)] = win
             n_tok[s] = len(win)
         # dispatch temporaries stay locals until the host sync below
-        toks_dev = jnp.array(toks)
-        pos_dev = jnp.array(self._slot_pos.astype(np.int32))
-        n_dev = jnp.array(n_tok)
+        toks_dev = kv.to_dev(toks)
+        pos_dev = kv.to_dev(self._slot_pos.astype(np.int32))
+        n_dev = kv.to_dev(n_tok)
         with self._pool_lock:
             if self.paged:
-                nxt, new_cache = self.verify(
-                    self._params, kv.cache, toks_dev, pos_dev, n_dev,
-                    kv.table_dev)
+                nxt, new_cache = self._dispatch(
+                    self.verify, self._params, kv.cache, toks_dev,
+                    pos_dev, n_dev, kv.table_dev)
             else:
-                nxt, new_cache = self.verify(
-                    self._params, kv.cache, toks_dev, pos_dev, n_dev)
+                nxt, new_cache = self._dispatch(
+                    self.verify, self._params, kv.cache, toks_dev,
+                    pos_dev, n_dev)
             kv.commit(new_cache, donated=self.donate)
         self.stats_decode_dispatches += 1
         host_nxt = np.asarray(nxt)      # forces the dispatch chain
@@ -1697,6 +1858,7 @@ class ServeEngine:
             "policy": self.policy.name,
             "donate": self.donate,
             "paged_kernel": self.paged_kernel,
+            "tp": self.tp,
             "p50_latency_s": percentile(lats, 0.50),
             "p99_latency_s": percentile(lats, 0.99),
             "p50_ttft_s": percentile(ttfts, 0.50),

@@ -52,9 +52,12 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..models.layers import check_cache_invariant
-from ..steps import init_paged_slot_cache, init_slot_cache
+from ..sharding import logical_sharding
+from ..steps import (TP_SERVE_RULES, init_paged_slot_cache, init_slot_cache,
+                     serve_cache_axes)
 from .pager import GARBAGE_PAGE, PagePool
 
 # The engine-init guard and the per-block trace-time guard are the SAME
@@ -73,6 +76,24 @@ def _no_deleted_leaves(objs, where: str):
             "and pinning must never overlap")
 
 
+def cache_tree_shardings(cache, mesh):
+    """Per-leaf ``NamedSharding`` tree for any cache with the serve leaf
+    names — the slot pool, a paged pool, or a prefill row cache (same
+    leaf names and ranks throughout).  Resolution is strict: a mesh axis
+    that does not divide the leaf dim is dropped (small head counts
+    replicate, never pad — pjit argument shardings must divide evenly).
+    Works on concrete arrays and ``jax.eval_shape`` results alike, so
+    ``make_jit_steps`` can derive output shardings without a live pool."""
+    def mk(path, leaf):
+        name = (path[-1].key if hasattr(path[-1], "key")
+                else str(path[-1]))
+        return logical_sharding(
+            leaf.shape, serve_cache_axes(name, len(leaf.shape)),
+            mesh, TP_SERVE_RULES, strict=True)
+
+    return jax.tree_util.tree_map_with_path(mk, cache)
+
+
 class KVState:
     """Single owner of one slot pool's KV cache (dense or paged).
 
@@ -85,12 +106,24 @@ class KVState:
 
     def __init__(self, cfg, slots: int, cache_len: int, dtype, *,
                  page_size: int | None = None, num_pages: int | None = None,
-                 pin_max: int = 64):
+                 pin_max: int = 64, mesh=None, tp: bool = False):
         self.cfg = cfg
         self.slots = slots
         self.cache_len = cache_len
         self.page_size = page_size
         self.paged = page_size is not None
+        # tensor-parallel serving: every cache leaf gets a per-leaf
+        # NamedSharding (heads on the model axis, strict resolution — a
+        # head count the axis cannot divide replicates, never pads: pjit
+        # argument shardings must divide evenly) and every host->device
+        # mirror is committed replicated, so the engine's host-side reads
+        # (tokens, pos, tables) never shard
+        self.mesh, self.tp = mesh, bool(tp)
+        if self.tp:
+            assert mesh is not None, "tp=True needs a mesh"
+            self.rep = NamedSharding(mesh, P())
+        else:
+            self.rep = None
         if self.paged:
             assert cache_len % page_size == 0, (
                 f"page_size {page_size} must divide cache_len {cache_len}")
@@ -101,15 +134,22 @@ class KVState:
             self.cache = init_paged_slot_cache(cfg, slots, cache_len, dtype,
                                                page_size, num_pages)
             self._table = np.zeros((slots, self.pages_per_slot), np.int32)
-            # device mirrors are always jnp.array (a copy): asarray may
-            # alias the numpy buffer, which async dispatch could read
-            # *after* a later host-side mutation
-            self.table_dev = jnp.array(self._table)
         else:
             self.pages_per_slot = 0
             self.pager = None
             self.cache = init_slot_cache(cfg, slots, cache_len, dtype)
-            self._table = self.table_dev = None
+            self._table = None
+        self.shardings = self.cache_shardings(self.cache)
+        if self.tp:
+            self.cache = jax.device_put(self.cache, self.shardings)
+        if self.paged:
+            # device mirrors are always a copy (jnp.array, or a committed
+            # device_put of one under tp): asarray may alias the numpy
+            # buffer, which async dispatch could read *after* a later
+            # host-side mutation
+            self.table_dev = self.to_dev(self._table)
+        else:
+            self.table_dev = None
         self._pins: list = []
         self._pin_max = pin_max
         self.version = 0
@@ -117,6 +157,22 @@ class KVState:
         self.copied_commits = 0
         self.pin_syncs = 0            # forced drains from a full pin list
         self.debug_validate = False   # tests: scan pins for dead buffers
+
+    # ------------------------------------------------------------ sharding
+    def cache_shardings(self, cache):
+        """:func:`cache_tree_shardings` over ``cache``, or ``None`` when
+        this state is not tensor-parallel."""
+        if not self.tp:
+            return None
+        return cache_tree_shardings(cache, self.mesh)
+
+    def to_dev(self, x):
+        """Host value -> device mirror: always a fresh copy; committed
+        replicated on the mesh under tp (so every shard's dispatch reads
+        it locally) and a plain single-device copy otherwise."""
+        if self.tp:
+            return jax.device_put(jnp.array(x), self.rep)
+        return jnp.array(x)
 
     # ------------------------------------------------------------ ownership
     def commit(self, new_cache, *, donated: bool) -> None:
@@ -193,7 +249,7 @@ class KVState:
         self.sync_table()
         insert_row = self._table[slot].copy()
         insert_row[:n_shared] = GARBAGE_PAGE
-        return jnp.array(insert_row)
+        return self.to_dev(insert_row)
 
     def grow_slot_pages(self, slot: int, ids, *, base: int) -> None:
         """On-demand growth: bind physical pages ``ids`` at the slot's
@@ -230,7 +286,7 @@ class KVState:
         so it is pinned, not dropped."""
         assert self.paged
         self.pin(self.table_dev)
-        self.table_dev = jnp.array(self._table)
+        self.table_dev = self.to_dev(self._table)
 
     # ------------------------------------------------------------ reporting
     def stats(self) -> dict:

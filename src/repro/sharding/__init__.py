@@ -1,9 +1,9 @@
 from .rules import (
-    LOGICAL_RULES, axis_size, logical_spec, logical_sharding, shard,
-    sharding_ctx, current_mesh,
+    LOGICAL_RULES, axis_size, logical_spec, logical_sharding, resolved_axes,
+    shard, sharding_ctx, current_mesh,
 )
 
 __all__ = [
-    "LOGICAL_RULES", "axis_size", "logical_spec", "logical_sharding", "shard",
-    "sharding_ctx", "current_mesh",
+    "LOGICAL_RULES", "axis_size", "logical_spec", "logical_sharding",
+    "resolved_axes", "shard", "sharding_ctx", "current_mesh",
 ]

@@ -63,6 +63,18 @@ def current_mesh() -> Mesh | None:
     return _CTX.mesh
 
 
+def resolved_axes(logical: str) -> tuple[str, ...]:
+    """Mesh axes the *active* sharding context maps ``logical`` onto —
+    () when no mesh is active or every candidate axis is absent.  Lets
+    layout-sensitive code (the per-shard paged-kernel dispatch) ask how
+    the current rule set lays a dim out without re-deriving the rules."""
+    mesh, rules = _CTX.mesh, _CTX.rules
+    if mesh is None:
+        return ()
+    rules = rules if rules is not None else LOGICAL_RULES
+    return tuple(a for a in rules.get(logical, ()) if a in mesh.shape)
+
+
 def axis_size(mesh: Mesh, names: tuple[str, ...]) -> int:
     n = 1
     for a in names:
@@ -103,8 +115,22 @@ def logical_spec(shape: tuple[int, ...], logical_axes: tuple[str | None, ...],
                  strict: bool = False) -> P:
     rules = dict(LOGICAL_RULES, **(rules or {})) if rules else LOGICAL_RULES
     assert len(shape) == len(logical_axes), (shape, logical_axes)
-    parts = [_resolve_dim(d, la, mesh, rules, strict)
-             for d, la in zip(shape, logical_axes)]
+    parts = []
+    used: set[str] = set()
+    # cross-dim first-wins: a mesh axis taken by an earlier dim is dropped
+    # from later dims (PartitionSpec forbids the same mesh axis twice, and
+    # serve caches legitimately annotate both a sequence dim and a head dim
+    # that map to "model" — the active rule set decides which one wins by
+    # mapping the other to ())
+    for d, la in zip(shape, logical_axes):
+        part = _resolve_dim(d, la, mesh, rules, strict)
+        if part is not None:
+            names = (part,) if isinstance(part, str) else part
+            names = tuple(a for a in names if a not in used)
+            used.update(names)
+            part = (None if not names else
+                    names[0] if len(names) == 1 else names)
+        parts.append(part)
     return P(*parts)
 
 

@@ -16,6 +16,37 @@ from .sharding import sharding_ctx
 
 DECODE_RULES = {"heads": ()}  # decode shards cache-seq, not heads
 
+# Tensor-parallel serving: the KV pool shards on *heads* (kv_heads /
+# ssm_heads / conv_dim -> model, straight from LOGICAL_RULES) and the
+# sequence/page and slot axes stay replicated — the exact inverse of the
+# legacy DECODE_RULES layout.  batch -> () keeps tokens, logits, block
+# tables and per-slot pos replicated so the engine's host-side mirrors
+# read them without a gather.
+TP_SERVE_RULES = {"seq_shard": (), "batch": ()}
+
+# Serve-cache leaf name -> logical axes (dense slot pools, paged pools
+# and batch=1/bpad prefill row caches all share leaf names and ranks, so
+# one table covers every cache the engine moves between steps).  Leaves
+# without a head-like dim (MLA latents, pos) resolve to fully replicated
+# under TP_SERVE_RULES.
+SERVE_CACHE_AXES: dict[str, tuple[str | None, ...]] = {
+    "k": (None, "batch", "seq_shard", "kv_heads", None),
+    "v": (None, "batch", "seq_shard", "kv_heads", None),
+    "ckv": (None, "batch", "seq_shard", None),
+    "krope": (None, "batch", "seq_shard", None),
+    "conv": (None, "batch", None, "conv_dim"),
+    "state": (None, "batch", "ssm_heads", None, None),
+}
+
+
+def serve_cache_axes(name: str, ndim: int) -> tuple[str | None, ...]:
+    """Logical axes for one serve-cache leaf (replicated fallback for
+    unknown names or rank mismatches — e.g. ``pos``)."""
+    axes = SERVE_CACHE_AXES.get(name)
+    if axes is None or len(axes) != ndim:
+        return (None,) * ndim
+    return axes
+
 
 def cast_tree(tree, dtype):
     dt = jnp.dtype(dtype)
@@ -79,9 +110,11 @@ def make_train_step(cfg, mesh=None, hp: OptHParams = OptHParams()):
     return train_step
 
 
-def make_prefill_step(cfg, mesh=None, cache_len=None):
+def make_prefill_step(cfg, mesh=None, cache_len=None, *, tp=False):
+    rules = TP_SERVE_RULES if tp else None
+
     def prefill_step(params, tokens, patches=None):
-        with sharding_ctx(mesh):
+        with sharding_ctx(mesh, rules):
             pc = cast_tree(params, cfg.dtype)
             out = forward(pc, cfg, tokens, mode="prefill", patches=patches,
                           cache_len=cache_len)
@@ -90,11 +123,12 @@ def make_prefill_step(cfg, mesh=None, cache_len=None):
     return prefill_step
 
 
-def make_serve_step(cfg, mesh=None):
+def make_serve_step(cfg, mesh=None, *, tp=False):
     """One decode step: (params, cache, tokens) -> (next_tokens, cache)."""
+    rules = TP_SERVE_RULES if tp else DECODE_RULES
 
     def serve_step(params, cache, tokens):
-        with sharding_ctx(mesh, DECODE_RULES):
+        with sharding_ctx(mesh, rules):
             pc = cast_tree(params, cfg.dtype)
             out = forward(pc, cfg, tokens, mode="decode", pos=cache["pos"],
                           cache=cache)
@@ -200,7 +234,7 @@ def init_paged_slot_cache(cfg, slots: int, cache_len: int, dtype,
     return {"pos": jnp.zeros((slots,), jnp.int32), "blocks": tuple(blocks)}
 
 
-def make_insert_step(cfg, mesh=None):
+def make_insert_step(cfg, mesh=None, *, tp=False):
     """Scatter one prefilled request (a batch=1 cache from
     ``make_prefill_step`` with the pool's ``cache_len``) into slot ``slot``
     of the shared batched cache, replacing every leaf row — so whatever a
@@ -209,9 +243,10 @@ def make_insert_step(cfg, mesh=None):
     (cache, row_cache, slot) -> cache with slot ``slot`` replaced.
     ``slot`` may be a traced scalar: one jit covers every slot.
     """
+    rules = TP_SERVE_RULES if tp else DECODE_RULES
 
     def insert_step(cache, row_cache, slot):
-        with sharding_ctx(mesh, DECODE_RULES):
+        with sharding_ctx(mesh, rules):
             def put(c, r):
                 start = (0, slot) + (0,) * (c.ndim - 2)
                 return jax.lax.dynamic_update_slice(c, r.astype(c.dtype),
@@ -226,7 +261,7 @@ def make_insert_step(cfg, mesh=None):
 
 
 def make_batched_insert_step(cfg, mesh=None, *, cache_len: int,
-                             page_size: int | None = None):
+                             page_size: int | None = None, tp=False):
     """Insert row ``row`` of a *batched* prefill output into slot ``slot``
     of the shared cache (dense or paged).
 
@@ -251,9 +286,10 @@ def make_batched_insert_step(cfg, mesh=None, *, cache_len: int,
     every leaf is a shape/dtype-preserving in-place write).  The
     ``rows_cache`` argument must **not** be donated — one prefill batch
     feeds one insert per row, so the same version is read repeatedly."""
+    rules = TP_SERVE_RULES if tp else DECODE_RULES
 
     def insert_step(cache, rows_cache, row, slot, table_row=None):
-        with sharding_ctx(mesh, DECODE_RULES):
+        with sharding_ctx(mesh, rules):
             new_blocks = []
             for spec, cb, rb in zip(cfg.pattern, cache["blocks"],
                                     rows_cache["blocks"]):
@@ -284,7 +320,7 @@ def make_batched_insert_step(cfg, mesh=None, *, cache_len: int,
 
 
 def make_prefix_gather_step(cfg, mesh=None, *, cache_len: int,
-                            page_size: int):
+                            page_size: int, tp=False):
     """Materialise a batch-1 dense row cache from shared KV pages — the
     read half of a prefix-cache hit:
 
@@ -314,9 +350,10 @@ def make_prefix_gather_step(cfg, mesh=None, *, cache_len: int,
         "machinery — non-chunkable configs bypass the prefix cache")
     pps = cache_len // page_size
     meta = cache_meta(cfg, 1, cache_len)
+    rules = TP_SERVE_RULES if tp else DECODE_RULES
 
     def gather_step(cache, table_row, pos):
-        with sharding_ctx(mesh, DECODE_RULES):
+        with sharding_ctx(mesh, rules):
             blocks = []
             for spec, cb, bm in zip(cfg.pattern, cache["blocks"],
                                     meta["blocks"]):
@@ -339,7 +376,7 @@ def make_prefix_gather_step(cfg, mesh=None, *, cache_len: int,
 
 def make_decode_step(cfg, mesh=None, *, cache_len: int | None = None,
                      page_size: int | None = None,
-                     paged_kernel: bool = False):
+                     paged_kernel: bool = False, tp=False):
     """Masked continuous-batching decode over the slot pool:
     (params, cache, tokens, active[, table]) -> (next_tokens, cache).
 
@@ -374,9 +411,10 @@ def make_decode_step(cfg, mesh=None, *, cache_len: int | None = None,
         assert cache_len is not None and cache_len % page_size == 0
     assert not (paged_kernel and not paged), \
         "paged_kernel needs a paged cache (page_size set)"
+    rules = TP_SERVE_RULES if tp else DECODE_RULES
 
     def decode_step(params, cache, tokens, active, table=None):
-        with sharding_ctx(mesh, DECODE_RULES):
+        with sharding_ctx(mesh, rules):
             pc = cast_tree(params, cfg.dtype)
             pages = ({"table": table, "page_size": page_size,
                       "cache_len": cache_len, "kernel": paged_kernel}
@@ -399,7 +437,7 @@ def make_decode_step(cfg, mesh=None, *, cache_len: int | None = None,
 
 
 def make_verify_step(cfg, mesh=None, *, cache_len: int | None = None,
-                     page_size: int | None = None):
+                     page_size: int | None = None, tp=False):
     """Draft-verify speculative decode over the slot pool:
 
         (params, cache, tokens, pos, n_tok[, table]) -> (argmax, cache)
@@ -444,9 +482,10 @@ def make_verify_step(cfg, mesh=None, *, cache_len: int | None = None,
         f"{cfg.name}: speculative decoding needs a chunk-exact config "
         "(no MoE, no SSM, no SWA ring shorter than cache_len) and a "
         "scalar greedy-token frontend")
+    rules = TP_SERVE_RULES if tp else DECODE_RULES
 
     def verify_step(params, cache, tokens, pos, n_tok, table=None):
-        with sharding_ctx(mesh, DECODE_RULES):
+        with sharding_ctx(mesh, rules):
             pc = cast_tree(params, cfg.dtype)
             pages = ({"table": table, "page_size": page_size,
                       "cache_len": cache_len, "kernel": False}
@@ -464,7 +503,8 @@ def make_verify_step(cfg, mesh=None, *, cache_len: int | None = None,
     return verify_step
 
 
-def make_prefill_chunk_step(cfg, mesh=None, cache_len: int | None = None):
+def make_prefill_chunk_step(cfg, mesh=None, cache_len: int | None = None, *,
+                            tp=False):
     """Cache-append prefill continuation (chunked/preemptible prefill):
 
         (params, row_cache, tokens, q_off[, patches]) -> (row_cache,
@@ -485,6 +525,7 @@ def make_prefill_chunk_step(cfg, mesh=None, cache_len: int | None = None):
     assert chunkable(cfg, cache_len), (
         f"{cfg.name}: chunked prefill needs linear-cache attention blocks "
         "(no MoE, no SSM, no SWA ring shorter than cache_len)")
+    rules = TP_SERVE_RULES if tp else None
 
     def chunk_step(params, row_cache, tokens, q_off, patches=None, *,
                    attn_extent=None, want_logits=True):
@@ -492,7 +533,7 @@ def make_prefill_chunk_step(cfg, mesh=None, cache_len: int | None = None):
         # static_argnames): a per-chunk extent bucket keeps total
         # chunked FLOPs at the one-shot level, and non-final chunks skip
         # the LM head entirely
-        with sharding_ctx(mesh):
+        with sharding_ctx(mesh, rules):
             pc = cast_tree(params, cfg.dtype)
             out = forward(pc, cfg, tokens, mode="prefill_chunk", pos=q_off,
                           cache=row_cache, patches=patches,
@@ -509,4 +550,4 @@ __all__ = ["init_train_state", "make_train_step", "make_prefill_step",
            "make_prefix_gather_step", "make_verify_step",
            "init_slot_cache", "init_paged_slot_cache", "paged_names",
            "chunkable", "speculatable", "greedy_oneshot", "cast_tree",
-           "init_cache", "OptHParams"]
+           "init_cache", "OptHParams", "TP_SERVE_RULES", "serve_cache_axes"]

@@ -73,13 +73,13 @@ def test_no_mesh_axis_used_twice(dims_axes):
             if part is None:
                 continue
             used += list(part if isinstance(part, tuple) else (part,))
-        # NOTE: distinct logical axes can map to the same mesh axis; the
-        # resolver itself must not emit duplicates *within one dim*, and
-        # PartitionSpec construction would reject cross-dim duplicates at
-        # jit time — exercised by the dry-run. Here: within-dim check.
-        for part in spec:
-            if isinstance(part, tuple):
-                assert len(set(part)) == len(part)
+        # Distinct logical axes can map to the same mesh axis — serve
+        # caches legitimately annotate both a sequence dim and a head
+        # dim that resolve to "model" — and the resolver dedups them
+        # cross-dim, first dim wins (PartitionSpec would reject the
+        # duplicate at jit time).  So the *whole* spec never repeats a
+        # mesh axis, not just any single dim.
+        assert len(set(used)) == len(used), spec
 
 
 def test_strict_drop_example_embed_vocab():
@@ -99,3 +99,143 @@ def test_padded_heads_kept_nonstrict():
     spec_s = logical_spec((2, 4096, 40, 128),
                           ("batch", "seq", "heads", None), mesh, strict=True)
     assert spec_s[2] is None         # strict drops it
+
+
+# ------------------------------------------- serve-side cache logical axes
+def test_cross_dim_first_wins_dedup():
+    """Both the cache sequence dim and the KV head dim map to "model";
+    which one actually takes the axis is the *rule set's* choice — the
+    resolver's first-wins dedup just enforces one winner per mesh axis."""
+    from repro.steps import DECODE_RULES, TP_SERVE_RULES
+
+    mesh = _mesh((1, 8))
+    shape, axes = (8, 8), ("seq_shard", "kv_heads")
+    # legacy decode layout: the sequence dim wins, the head dim dedups
+    spec = logical_spec(shape, axes, mesh, DECODE_RULES, strict=True)
+    assert spec[0] == "model" and spec[1] is None
+    # tensor-parallel serving maps seq_shard to (): heads take the axis
+    spec = logical_spec(shape, axes, mesh, TP_SERVE_RULES, strict=True)
+    assert spec[0] is None and spec[1] == "model"
+
+
+def test_tp_serve_gqa_pool_shards_kv_heads():
+    """Paged GQA pool leaf (stack, pages, page_size, Hkv, dh): under the
+    TP serve rules only the KV head dim takes the model axis — pages and
+    page_size stay replicated so the block table stays host-authoritative
+    and every device holds every page (of its head shard)."""
+    from repro.steps import TP_SERVE_RULES, serve_cache_axes
+
+    mesh = _mesh((1, 8))
+    shape = (2, 9, 8, 8, 64)
+    spec = logical_spec(shape, serve_cache_axes("k", 5), mesh,
+                        TP_SERVE_RULES, strict=True)
+    assert spec[3] == "model"
+    assert all(spec[i] is None for i in (0, 1, 2, 4))
+
+
+def test_tp_serve_small_kv_heads_replicate_not_pad():
+    """A 2-head KV cache on an 8-way model axis must REPLICATE the head
+    dim — strict resolution (pjit arguments must divide) drops the axis,
+    and even the non-strict constraint path refuses >2x padding."""
+    from repro.steps import TP_SERVE_RULES, serve_cache_axes
+
+    mesh = _mesh((1, 8))
+    shape = (2, 9, 8, 2, 64)            # Hkv=2 cannot split 8 ways
+    for strict in (True, False):
+        spec = logical_spec(shape, serve_cache_axes("k", 5), mesh,
+                            TP_SERVE_RULES, strict=strict)
+        assert spec[3] is None, (strict, spec)
+
+
+def test_legacy_decode_rules_unchanged_by_head_annotation():
+    """The same head-annotated leaf under the legacy DECODE_RULES keeps
+    the old layout byte-for-byte: the sequence/page dim takes "model"
+    first and the head annotation dedups away."""
+    from repro.steps import DECODE_RULES, serve_cache_axes
+
+    mesh = _mesh((1, 8))
+    shape = (2, 9, 8, 8, 64)
+    spec = logical_spec(shape, serve_cache_axes("k", 5), mesh,
+                        DECODE_RULES, strict=False)
+    assert spec[2] == "model"           # page_size dim, as before PR 9
+    assert spec[3] is None
+
+
+def test_tp_serve_mla_latents_replicate():
+    """MLA pools have no head dim (latent rank leaves): fully replicated
+    under TP — the latent is below every query head, splitting it would
+    split the math, not the heads."""
+    from repro.steps import TP_SERVE_RULES, serve_cache_axes
+
+    mesh = _mesh((1, 8))
+    for name, shape in (("ckv", (2, 9, 8, 160)),
+                        ("krope", (2, 9, 8, 32))):
+        spec = logical_spec(shape, serve_cache_axes(name, 4), mesh,
+                            TP_SERVE_RULES, strict=True)
+        assert all(p is None for p in spec), (name, spec)
+
+
+def test_tp_serve_ssm_leaves():
+    """SSM caches shard on their own head/channel axes: the state leaf
+    on ssm_heads, the conv ring on conv_dim; small counts drop."""
+    from repro.steps import TP_SERVE_RULES, serve_cache_axes
+
+    mesh = _mesh((1, 8))
+    spec = logical_spec((2, 4, 8, 64, 16), serve_cache_axes("state", 5),
+                        mesh, TP_SERVE_RULES, strict=True)
+    assert spec[2] == "model"
+    spec = logical_spec((2, 4, 3, 256), serve_cache_axes("conv", 4),
+                        mesh, TP_SERVE_RULES, strict=True)
+    assert spec[3] == "model"
+    # 2 ssm heads on 8 devices: replicate
+    spec = logical_spec((2, 4, 2, 64, 16), serve_cache_axes("state", 5),
+                        mesh, TP_SERVE_RULES, strict=True)
+    assert spec[2] is None
+
+
+def test_serve_cache_axes_fallback_replicates():
+    """Leaves the table does not name (pos, future cache kinds) fall
+    back to fully replicated — never silently sharded."""
+    from repro.steps import serve_cache_axes
+
+    assert serve_cache_axes("pos", 1) == (None,)
+    assert serve_cache_axes("mystery", 3) == (None, None, None)
+
+
+def test_heads_w_weight_axis_shards():
+    """Weight head axis (heads_w) stays sharded in decode — the serve
+    rules never touch weight axes."""
+    from repro.steps import TP_SERVE_RULES
+
+    mesh = _mesh((1, 8))
+    spec = logical_spec((8, 64, 512), ("heads_w", None, "fsdp"), mesh,
+                        TP_SERVE_RULES, strict=True)
+    assert spec[0] == "model" and spec[1] is None
+
+
+def test_serve_cache_axes_matches_cache_meta():
+    """The KVState-side name table and the model-side cache meta must
+    resolve every real leaf to the SAME spec under the TP serve rules —
+    over GQA, MLA and SSM cache leaves of real (tiny) configs."""
+    import jax.tree_util as jtu
+
+    from repro.configs import get
+    from repro.models.lm import LeafMeta, cache_meta
+    from repro.steps import TP_SERVE_RULES, serve_cache_axes
+
+    mesh = _mesh((1, 4))
+    for arch in ("qwen2.5-14b", "minicpm3-4b", "mamba2-780m"):
+        cfg = get(arch).tiny()
+        meta = cache_meta(cfg, 4, 16)
+        leaves, _ = jtu.tree_flatten_with_path(
+            meta, is_leaf=lambda x: isinstance(x, LeafMeta))
+        assert leaves
+        for path, m in leaves:
+            name = (path[-1].key if hasattr(path[-1], "key")
+                    else str(path[-1]))
+            got = logical_spec(
+                m.shape, serve_cache_axes(name, len(m.shape)), mesh,
+                TP_SERVE_RULES, strict=True)
+            want = logical_spec(m.shape, m.axes, mesh, TP_SERVE_RULES,
+                                strict=True)
+            assert got == want, (arch, name, got, want)
